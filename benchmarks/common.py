@@ -1,0 +1,47 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.graph import build_layout, from_edges, rmat
+
+DEFAULT_SCALE = 12      # 4k vertices / 64k edges: CPU-budget default
+
+
+def graphs(scale: int = DEFAULT_SCALE, weighted: bool = False):
+    """The benchmark graph set: rmat (paper's synthetic family) + a
+    uniform-degree graph standing in for the web-crawl family."""
+    from repro.graph import uniform_random
+    return {
+        f"rmat{scale}": rmat(scale, 16, seed=1, weighted=weighted),
+        f"uniform{scale}": uniform_random(1 << scale, (1 << scale) * 8,
+                                          seed=2, weighted=weighted),
+    }
+
+
+def layout_for(g, k: int = 32):
+    return build_layout(g, k=k, edge_tile=256, msg_tile=128)
+
+
+def symmetrize(g):
+    src = np.repeat(np.arange(g.n), g.out_degrees())
+    return from_edges(np.concatenate([src, g.indices]),
+                      np.concatenate([g.indices, src]), n=g.n, dedup=True)
+
+
+def timed(fn, repeat: int = 3):
+    fn()                                   # warmup + compile
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,77 @@
+"""End-to-end LM training driver: data pipeline -> sharded train step ->
+checkpoint/restart, on a reduced config of an assigned architecture.
+
+  PYTHONPATH=src python examples/train_lm.py --arch qwen2-0.5b --steps 200
+  PYTHONPATH=src python examples/train_lm.py --resume ...      # restart
+
+Defaults are laptop-sized (reduced config, ~200 steps); pass --full to train
+the real config (needs real hardware).
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_local_mesh
+from repro.models.transformer import init_lm
+from repro.train import (DataConfig, OptConfig, TokenPipeline, checkpoint,
+                         init_opt_state, jit_train_step, make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    print(f"training {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"~{cfg.param_count()/1e6:.1f}M params")
+    mesh = make_local_mesh()
+    params, axes = init_lm(cfg, jax.random.PRNGKey(0))
+    ocfg = OptConfig(lr=3e-4, warmup=20, total_steps=args.steps,
+                     compute_dtype=cfg.dtype)
+    opt = init_opt_state(params, ocfg)
+    if ocfg.compute_dtype == "bfloat16":
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.bfloat16), params)
+    step_fn, sh = make_train_step(cfg, ocfg, mesh, axes, params)
+    jstep = jit_train_step(
+        step_fn, sh,
+        batch_keys=("embeds", "labels") if cfg.frontend else
+        ("tokens", "labels"))
+    pipe = TokenPipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch, seed=0,
+        embed_dim=cfg.d_model if cfg.frontend else None))
+
+    start = 0
+    if args.resume and checkpoint.latest_step(args.ckpt) is not None:
+        params, opt, start = checkpoint.restore(args.ckpt, params, opt)
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        params, opt, m = jstep(params, opt, batch)
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(m['loss']):.4f} "
+                  f"lr {float(m['lr']):.2e} gnorm {float(m['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)")
+        if (i + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt, i + 1, params, opt)
+    checkpoint.save(args.ckpt, args.steps, params, opt)
+    print("done; checkpoint at", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

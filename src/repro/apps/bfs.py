@@ -1,0 +1,47 @@
+"""Breadth-First Search (paper Alg. 5).
+
+scatterFunc -> own id;  initFunc -> false (frontier rebuilt);
+gatherFunc -> first-visit parent update (min-monoid: lowest-id parent wins,
+a deterministic valid BFS tree);  filterFunc -> true.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import monoid as M
+from ..core.engine import Engine
+from ..core.program import VertexProgram
+
+
+def bfs_program() -> VertexProgram:
+    def scatter_fn(state):
+        return state["vid"]
+
+    def apply_fn(state, acc, touched, it):
+        unvisited = state["parent"] < 0
+        hit = touched & unvisited
+        parent = jnp.where(hit, acc.astype(jnp.int32), state["parent"])
+        level = jnp.where(hit, it + 1, state["level"])
+        return dict(state, parent=parent, level=level), hit
+
+    return VertexProgram(name="bfs", monoid=M.min_(jnp.uint32),
+                         scatter_fn=scatter_fn, apply_fn=apply_fn)
+
+
+def bfs(layout, source: int, mode: str = "hybrid",
+        use_pallas: bool = False, bw_ratio: float = 2.0):
+    n_pad = layout.n_pad
+    program = bfs_program()
+    parent = jnp.full((n_pad,), -1, jnp.int32).at[source].set(source)
+    level = jnp.full((n_pad,), -1, jnp.int32).at[source].set(0)
+    vid = jnp.arange(n_pad, dtype=jnp.uint32)
+    frontier = np.zeros(n_pad, bool)
+    frontier[source] = True
+    eng = Engine(layout, program, mode=mode, use_pallas=use_pallas,
+                 bw_ratio=bw_ratio)
+    state, _, stats = eng.run({"parent": parent, "level": level, "vid": vid},
+                              frontier, max_iters=n_pad)
+    return {"parent": np.asarray(state["parent"])[:layout.n],
+            "level": np.asarray(state["level"])[:layout.n],
+            "stats": stats}

@@ -1,0 +1,39 @@
+"""Connected components via label propagation (paper Alg. 7, §5).
+
+labels start as vertex ids; scatterFunc -> label; gatherFunc (compLabel) ->
+keep the minimum label, activate on change.  On symmetrized graphs this
+converges to weakly-connected components.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import monoid as M
+from ..core.engine import Engine
+from ..core.program import VertexProgram
+
+
+def cc_program() -> VertexProgram:
+    def scatter_fn(state):
+        return state["label"]
+
+    def apply_fn(state, acc, touched, it):
+        better = touched & (acc < state["label"])
+        label = jnp.where(better, acc, state["label"])
+        return dict(state, label=label), better
+
+    return VertexProgram(name="cc", monoid=M.min_(jnp.uint32),
+                         scatter_fn=scatter_fn, apply_fn=apply_fn)
+
+
+def connected_components(layout, mode: str = "hybrid",
+                         use_pallas: bool = False):
+    n_pad = layout.n_pad
+    program = cc_program()
+    label = jnp.arange(n_pad, dtype=jnp.uint32)
+    frontier = np.zeros(n_pad, bool)
+    frontier[:layout.n] = True
+    eng = Engine(layout, program, mode=mode, use_pallas=use_pallas)
+    state, _, stats = eng.run({"label": label}, frontier, max_iters=n_pad)
+    return {"label": np.asarray(state["label"])[:layout.n], "stats": stats}

@@ -1,0 +1,53 @@
+"""Parallel Nibble (paper Alg. 3/4) — seeded random-walk probability mass.
+
+This is the paper's showcase for *selective frontier continuity*:
+initFunc halves the vertex's probability and lets it stay active iff the
+retained mass is still above the eps*deg threshold, independently of whether
+the Gather phase touches it again.
+
+One iteration:  p(v) <- p(v)/2 + sum_{u->v, u active} p(u)/(2 deg(u)),
+with the frontier = {v : p(v) >= eps*deg(v)}.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import monoid as M
+from ..core.engine import Engine
+from ..core.program import VertexProgram
+
+
+def nibble_program(eps: float) -> VertexProgram:
+    def scatter_fn(state):
+        return jnp.where(state["deg"] > 0,
+                         state["pr"] / (2.0 * state["deg"]), 0.0)
+
+    def init_fn(state, it):
+        pr = state["pr"] * 0.5
+        return dict(state, pr=pr), pr >= eps * state["deg"]
+
+    def apply_fn(state, acc, touched, it):
+        return dict(state, pr=state["pr"] + acc), jnp.ones_like(touched)
+
+    def filter_fn(state, it):
+        return state, state["pr"] >= eps * state["deg"]
+
+    return VertexProgram(name="nibble", monoid=M.add(jnp.float32),
+                         scatter_fn=scatter_fn, apply_fn=apply_fn,
+                         init_fn=init_fn, filter_fn=filter_fn)
+
+
+def nibble(layout, seeds, eps: float = 1e-4, max_iters: int = 100,
+           mode: str = "hybrid", use_pallas: bool = False):
+    n_pad = layout.n_pad
+    seeds = np.atleast_1d(np.asarray(seeds))
+    program = nibble_program(eps)
+    pr = jnp.zeros((n_pad,), jnp.float32).at[seeds].set(1.0 / len(seeds))
+    deg = jnp.asarray(layout.deg.astype(np.float32))
+    frontier = np.zeros(n_pad, bool)
+    frontier[seeds] = True
+    eng = Engine(layout, program, mode=mode, use_pallas=use_pallas)
+    state, _, stats = eng.run({"pr": pr, "deg": deg}, frontier,
+                              max_iters=max_iters)
+    return {"pr": np.asarray(state["pr"])[:layout.n], "stats": stats}

@@ -1,0 +1,57 @@
+"""PageRank-Nibble (paper §4.1 cites it with Nibble as needing selective
+frontier continuity; Andersen-Chung-Lang approximate personalized PageRank).
+
+Push-free formulation on PPM: residual r diffuses, solution p accumulates:
+  p += alpha * r;   r' = (1-alpha)/2 * (r/deg pushed to neighbors + r kept)
+frontier = {v : r(v) >= eps * deg(v)} — selective continuity keeps vertices
+with large residual active regardless of incoming updates.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import monoid as M
+from ..core.engine import Engine
+from ..core.program import VertexProgram
+
+
+def pagerank_nibble_program(alpha: float, eps: float) -> VertexProgram:
+    def scatter_fn(state):
+        # push half of the non-retained residual along out-edges
+        share = (1.0 - alpha) * 0.5 * state["r"]
+        return jnp.where(state["deg"] > 0, share / state["deg"], 0.0)
+
+    def init_fn(state, it):
+        p = state["p"] + alpha * state["r"]
+        r = (1.0 - alpha) * 0.5 * state["r"]      # lazy half stays local
+        keep = r >= eps * state["deg"]
+        return dict(state, p=p, r=r), keep
+
+    def apply_fn(state, acc, touched, it):
+        r = state["r"] + acc
+        return dict(state, r=r), r >= eps * state["deg"]
+
+    def filter_fn(state, it):
+        return state, state["r"] >= eps * state["deg"]
+
+    return VertexProgram(name="pagerank_nibble",
+                         monoid=M.add(jnp.float32),
+                         scatter_fn=scatter_fn, apply_fn=apply_fn,
+                         init_fn=init_fn, filter_fn=filter_fn)
+
+
+def pagerank_nibble(layout, seeds, alpha: float = 0.15, eps: float = 1e-5,
+                    max_iters: int = 200, mode: str = "hybrid"):
+    n_pad = layout.n_pad
+    seeds = np.atleast_1d(np.asarray(seeds))
+    program = pagerank_nibble_program(alpha, eps)
+    r = jnp.zeros((n_pad,), jnp.float32).at[seeds].set(1.0 / len(seeds))
+    state = {"p": jnp.zeros((n_pad,), jnp.float32), "r": r,
+             "deg": jnp.asarray(layout.deg.astype(np.float32))}
+    frontier = np.zeros(n_pad, bool)
+    frontier[seeds] = True
+    eng = Engine(layout, program, mode=mode)
+    state, _, stats = eng.run(state, frontier, max_iters=max_iters)
+    return {"ppr": np.asarray(state["p"])[:layout.n],
+            "residual": np.asarray(state["r"])[:layout.n], "stats": stats}

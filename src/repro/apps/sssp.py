@@ -1,0 +1,46 @@
+"""Single-Source Shortest Path, Bellman-Ford style (paper Alg. 8).
+
+scatterFunc -> distance;  applyWeight -> val + wt;  gatherFunc -> relax
+(min-monoid), activate on improvement;  initFunc -> false.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import monoid as M
+from ..core.engine import Engine
+from ..core.program import VertexProgram
+
+INF = np.float32(np.inf)
+
+
+def sssp_program() -> VertexProgram:
+    def scatter_fn(state):
+        return state["dist"]
+
+    def apply_fn(state, acc, touched, it):
+        better = touched & (acc < state["dist"])
+        dist = jnp.where(better, acc, state["dist"])
+        return dict(state, dist=dist), better
+
+    def apply_weight(vals, w):
+        return vals + w
+
+    return VertexProgram(name="sssp", monoid=M.min_(jnp.float32),
+                         scatter_fn=scatter_fn, apply_fn=apply_fn,
+                         apply_weight=apply_weight)
+
+
+def sssp(layout, source: int, mode: str = "hybrid",
+         use_pallas: bool = False, max_iters: int = None):
+    assert layout.weighted, "SSSP needs an edge-weighted graph"
+    n_pad = layout.n_pad
+    program = sssp_program()
+    dist = jnp.full((n_pad,), INF, jnp.float32).at[source].set(0.0)
+    frontier = np.zeros(n_pad, bool)
+    frontier[source] = True
+    eng = Engine(layout, program, mode=mode, use_pallas=use_pallas)
+    state, _, stats = eng.run({"dist": dist}, frontier,
+                              max_iters=max_iters or n_pad)
+    return {"dist": np.asarray(state["dist"])[:layout.n], "stats": stats}

@@ -1,0 +1,58 @@
+"""SSSP with parent tracking via the packed (distance, parent) min-monoid.
+
+The paper's Alg. 8 tracks distances only; production SSSP wants the shortest
+-path tree.  A lexicographic uint64 lattice — (f32 distance bits << 32) |
+parent id — keeps the whole fold a pure ``min``, so the lock-free gather
+contract is untouched.  Requires x64 (see monoid.min_with_payload).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import monoid as M
+from ..core.engine import Engine
+from ..core.program import VertexProgram
+
+
+def sssp_parents_program() -> VertexProgram:
+    mono = M.min_with_payload()
+
+    def scatter_fn(state):
+        # message key = my distance (weight added en route), payload = my id
+        return M.pack_key_payload(state["dist"], state["vid"])
+
+    def apply_weight(vals, w):
+        key, payload = M.unpack_key_payload(vals)
+        return M.pack_key_payload(key + w, payload)
+
+    def apply_fn(state, acc, touched, it):
+        key, parent = M.unpack_key_payload(acc)
+        better = touched & (key < state["dist"])
+        dist = jnp.where(better, key, state["dist"])
+        par = jnp.where(better, parent.astype(jnp.int32), state["parent"])
+        return dict(state, dist=dist, parent=par), better
+
+    return VertexProgram(name="sssp_parents", monoid=mono,
+                         scatter_fn=scatter_fn, apply_fn=apply_fn,
+                         apply_weight=apply_weight)
+
+
+def sssp_with_parents(layout, source: int, mode: str = "hybrid"):
+    assert layout.weighted, "needs edge weights"
+    with jax.experimental.enable_x64():
+        n_pad = layout.n_pad
+        program = sssp_parents_program()
+        dist = jnp.full((n_pad,), jnp.inf, jnp.float32).at[source].set(0.0)
+        parent = jnp.full((n_pad,), -1, jnp.int32).at[source].set(source)
+        vid = jnp.arange(n_pad, dtype=jnp.uint32)
+        frontier = np.zeros(n_pad, bool)
+        frontier[source] = True
+        eng = Engine(layout, program, mode=mode)
+        state, _, stats = eng.run(
+            {"dist": dist, "parent": parent, "vid": vid}, frontier,
+            max_iters=n_pad)
+        return {"dist": np.asarray(state["dist"])[:layout.n],
+                "parent": np.asarray(state["parent"])[:layout.n],
+                "stats": stats}

@@ -1,0 +1,6 @@
+from . import monoid
+from .cost import CostModel
+from .engine import Engine, IterStats
+from .program import VertexProgram
+
+__all__ = ["monoid", "CostModel", "Engine", "IterStats", "VertexProgram"]

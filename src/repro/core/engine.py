@@ -1,0 +1,291 @@
+"""The PPM engine: scatter → initFrontier → exchange → gather → filter.
+
+Single-device engine over a partition-centric :class:`repro.graph.layout.Layout`.
+Each iteration follows paper Alg. 3/4 exactly:
+
+  1. *Scatter*: active vertices produce messages.  Per-partition mode choice
+     (Eq. 1 cost model):
+       - **DC stream**: all PNG message slots of DC-mode partitions that have
+         at least one active vertex are materialized (values only — the
+         adjacency side ``msg_slot``/``edge_dst`` is static, the paper's
+         pre-written ``dc_bin``).  Slots whose source vertex is inactive carry
+         the monoid identity, which makes them exact no-ops in the fold — the
+         array-semantics equivalent of the paper's "scatter the whole
+         partition" correctness contract.
+       - **SC stream**: active vertices of SC-mode partitions are compacted
+         (``nonzero``) and their CSR adjacency expanded into a `(value, dst)`
+         message list.  The buffers are sized by power-of-two *budgets* so the
+         compute really is proportional to the active edge count (rounded up)
+         — the static-shape realization of the paper's theoretical efficiency.
+  2. *initFrontier*: ``init_fn`` on active vertices → selective continuity.
+  3. *Gather*: one segmented monoid fold per stream into the (VMEM-resident,
+     on TPU) vertex tile, plus a `touched` fold; ``apply_fn`` updates touched
+     vertices and proposes activations.
+  4. *filterFrontier*: ``filter_fn`` on the union frontier.
+
+The 2-level active list appears as: per-partition active counts drive the mode
+decision and exclude empty partitions entirely (gPartList); tile-level
+predication inside the Pallas kernels skips edge tiles of inactive partitions
+(binPartList).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.layout import Layout
+from .cost import CostModel
+from .program import VertexProgram
+
+
+def _tree_where(mask, new, old):
+    def sel(a, b):
+        m = mask.reshape(mask.shape + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (int(x - 1).bit_length())
+
+
+@dataclasses.dataclass
+class IterStats:
+    it: int
+    n_active: int
+    e_active: int
+    dc_parts: int
+    sc_parts: int
+    dc_bytes: float
+    sc_bytes: float
+    wall_s: float
+
+
+class Engine:
+    """Single-device PPM engine.
+
+    mode: 'hybrid' (paper's GPOP), 'dc' (GPOP_DC), 'sc' (GPOP_SC).
+    use_pallas: route the gather fold through the Pallas segment_combine
+    kernel (interpret mode on CPU) instead of jax.ops segment ops.
+    """
+
+    def __init__(self, layout: Layout, program: VertexProgram,
+                 mode: str = "hybrid", bw_ratio: float = 2.0,
+                 use_pallas: bool = False):
+        assert mode in ("hybrid", "dc", "sc")
+        self.layout = layout
+        self.program = program
+        self.mode = mode
+        self.use_pallas = use_pallas
+        self.cost = CostModel.from_layout(layout, bw_ratio=bw_ratio)
+        L = layout
+        self.k, self.q, self.n_pad = L.k, L.q, L.n_pad
+
+        # device-resident static structure
+        self.png_src = jnp.asarray(L.png_src)                  # [NM]
+        self.png_part = jnp.asarray(
+            (L.png_src.astype(np.int64) // L.q).clip(0, L.k - 1)
+            .astype(np.int32))
+        self.msg_slot = jnp.asarray(L.msg_slot)                # [NE]
+        self.edge_dst = jnp.asarray(L.edge_dst)                # [NE]
+        self.edge_w = (jnp.asarray(L.edge_w)
+                       if L.edge_w is not None else None)
+        self.tile_src_part = jnp.asarray(L.tile_src_part)
+        self.csr_indptr = jnp.asarray(L.csr_indptr)
+        self.csr_indices = jnp.asarray(L.csr_indices)
+        self.csr_w = (jnp.asarray(L.csr_w)
+                      if L.csr_w is not None else None)
+        self.deg = jnp.asarray(L.deg.astype(np.int32))         # [n_pad]
+        self.vert_part = jnp.asarray(
+            (np.arange(L.n_pad, dtype=np.int64) // L.q).astype(np.int32))
+
+        # per-partition reductions used by the host-side mode decision
+        @jax.jit
+        def _part_stats(active):
+            a32 = active.astype(jnp.int32)
+            counts = jax.ops.segment_sum(a32, self.vert_part,
+                                         num_segments=L.k)
+            ea = jax.ops.segment_sum(a32 * self.deg, self.vert_part,
+                                     num_segments=L.k)
+            return counts, ea
+        self._part_stats = _part_stats
+
+        if use_pallas:
+            from ..kernels import ops as kops
+            mono = program.monoid
+            assert mono.name in ("add", "min", "max"), \
+                f"Pallas gather kernel does not support monoid {mono.name}"
+            self._gather_kernel = kops.GatherKernel(
+                layout, mono.name, mono.dtype, interpret=True)
+            self._scatter_kernel = kops.ScatterKernel(
+                layout, mono.name, mono.dtype, interpret=True)
+
+    # ------------------------------------------------------------------
+    def _fold(self, vals, valid, ids, num_segments):
+        """Monoid fold + touched flags (pure-jnp path)."""
+        mono = self.program.monoid
+        acc = mono.segment_fold(vals, ids, num_segments)
+        touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
+                                      num_segments=num_segments) > 0
+        return acc, touched
+
+    # ------------------------------------------------------------------
+    @functools.lru_cache(maxsize=128)
+    def _step_fn(self, bv: int, be: int):
+        """Build the jitted iteration for static SC budgets (bv, be)."""
+        prog, L, mono = self.program, self.layout, self.program.monoid
+        n_pad, k, q = self.n_pad, self.k, self.q
+        ident = mono.identity
+
+        def step(state, active, dc_mask, it):
+            msgs = prog.scatter_fn(state)                     # [n_pad]
+            msgs = msgs.astype(mono.dtype)
+            msgs_p = jnp.concatenate([msgs, mono.identity_array((1,))])
+            active_p = jnp.concatenate(
+                [active, jnp.zeros((1,), jnp.bool_)])
+
+            # ---- initFrontier (selective continuity) ----
+            if prog.init_fn is not None:
+                st2, keep = prog.init_fn(state, it)
+                state = _tree_where(active, st2, state)
+                keep = keep & active
+            else:
+                keep = jnp.zeros((n_pad,), jnp.bool_)
+
+            # ---- DC stream (paper Alg. 2: values-only messages over the
+            # pre-written dc_bin adjacency) ----
+            if self.use_pallas:
+                msg_data = self._scatter_kernel(
+                    msgs, active & dc_mask[self.vert_part])
+                dc_valid = (active_p[self.png_src]
+                            & dc_mask[self.png_part])
+            else:
+                dc_valid = (active_p[self.png_src]
+                            & dc_mask[self.png_part])         # [NM]
+                msg_data = jnp.where(dc_valid, msgs_p[self.png_src], ident)
+            msg_data_p = jnp.concatenate(
+                [msg_data, mono.identity_array((1,))])
+            dc_valid_p = jnp.concatenate(
+                [dc_valid, jnp.zeros((1,), jnp.bool_)])
+            edge_vals = msg_data_p[self.msg_slot]             # [NE]
+            edge_valid = dc_valid_p[self.msg_slot]
+            if prog.apply_weight is not None and self.edge_w is not None:
+                edge_vals = prog.apply_weight(edge_vals, self.edge_w)
+                edge_vals = jnp.where(edge_valid, edge_vals, ident)
+            if self.use_pallas:
+                acc, touched = self._gather_kernel(
+                    edge_vals, edge_valid, dc_mask.astype(jnp.int32))
+                acc = jnp.concatenate([acc, mono.identity_array((1,))])
+                touched = jnp.concatenate(
+                    [touched, jnp.zeros((1,), jnp.bool_)])
+            else:
+                acc, touched = self._fold(edge_vals, edge_valid,
+                                          self.edge_dst, n_pad + 1)
+
+            # ---- SC stream (static budgets; absent when be == 0) ----
+            if be > 0:
+                sc_active = active & ~dc_mask[self.vert_part]
+                ids = jnp.nonzero(sc_active, size=bv,
+                                  fill_value=n_pad)[0]         # [bv]
+                degs = jnp.where(ids < n_pad, self.deg[jnp.minimum(ids, n_pad - 1)], 0)
+                cum = jnp.cumsum(degs)
+                total = cum[-1]
+                j = jnp.arange(be, dtype=jnp.int32)
+                vi = jnp.searchsorted(cum, j, side="right")
+                vi = jnp.minimum(vi, bv - 1)
+                starts = cum - degs
+                src_v = ids[vi]
+                e_idx = (self.csr_indptr[jnp.minimum(src_v, n_pad)]
+                         + (j - starts[vi]))
+                valid = j < total
+                e_idx = jnp.where(valid, e_idx, 0)
+                dst = jnp.where(valid, self.csr_indices[e_idx],
+                                n_pad).astype(jnp.int32)
+                vals = msgs_p[jnp.minimum(src_v, n_pad)]
+                if prog.apply_weight is not None and self.csr_w is not None:
+                    vals = prog.apply_weight(vals, self.csr_w[e_idx])
+                vals = jnp.where(valid, vals, ident)
+                acc2, touched2 = self._fold(vals, valid, dst, n_pad + 1)
+                acc = mono.combine(acc, acc2)
+                touched = touched | touched2
+
+            acc = acc[:n_pad]
+            touched = touched[:n_pad]
+
+            # ---- Gather apply ----
+            st3, activated = prog.apply_fn(state, acc, touched, it)
+            state = _tree_where(touched, st3, state)
+            activated = activated & touched
+
+            # ---- filterFrontier on the union frontier ----
+            new_active = keep | activated
+            if prog.filter_fn is not None:
+                st4, fkeep = prog.filter_fn(state, it)
+                state = _tree_where(new_active, st4, state)
+                new_active = new_active & fkeep
+            return state, new_active
+
+        return jax.jit(step)
+
+    # ------------------------------------------------------------------
+    def run(self, state, frontier, max_iters: int = 10_000,
+            until_empty: bool = True, collect_stats: bool = True):
+        """Host-driven loop: per-iteration mode decision (paper Eq. 1)."""
+        active = jnp.asarray(frontier, jnp.bool_)
+        stats = []
+        for it in range(max_iters):
+            counts, ea = self._part_stats(active)
+            counts = np.asarray(counts)
+            ea = np.asarray(ea)
+            n_active = int(counts.sum())
+            if until_empty and n_active == 0:
+                break
+            has_active = counts > 0
+            if self.mode == "dc":
+                dc_mask = has_active
+            elif self.mode == "sc":
+                dc_mask = np.zeros(self.k, bool)
+            else:
+                dc_mask = self.cost.choose_dc(ea, has_active)
+            sc_sel = (~dc_mask) & has_active
+            bv = _next_pow2(int(counts[sc_sel].sum())) if sc_sel.any() else 0
+            be = _next_pow2(int(ea[sc_sel].sum())) if sc_sel.any() else 0
+            if sc_sel.any() and be == 0:
+                be, bv = 1, max(bv, 1)      # active vertices with degree 0
+            t0 = time.perf_counter()
+            state, active = self._step_fn(bv, be)(
+                state, active, jnp.asarray(dc_mask), jnp.int32(it))
+            jax.block_until_ready(active)
+            if collect_stats:
+                b = self.cost.bytes_for(dc_mask, ea, has_active)
+                stats.append(IterStats(
+                    it=it, n_active=n_active, e_active=int(ea.sum()),
+                    dc_parts=int(dc_mask.sum()), sc_parts=int(sc_sel.sum()),
+                    dc_bytes=b["dc_bytes"], sc_bytes=b["sc_bytes"],
+                    wall_s=time.perf_counter() - t0))
+        return state, active, stats
+
+    # ------------------------------------------------------------------
+    def run_fused(self, state, frontier, iters: int):
+        """Fully-jitted fixed-iteration loop (DC mode, no host round trips).
+
+        This is the PageRank-style path: all partitions scatter DC every
+        iteration (paper §6.2.2: "PageRank always uses DC mode").
+        """
+        step = self._step_fn(0, 0)
+        dc_mask = jnp.ones((self.k,), jnp.bool_)
+
+        @jax.jit
+        def loop(state, active):
+            def body(it, carry):
+                st, act = carry
+                return step(st, act, dc_mask, it)
+            return jax.lax.fori_loop(0, iters, body, (state, active))
+
+        return loop(state, jnp.asarray(frontier, jnp.bool_))

@@ -1,0 +1,68 @@
+"""Scatter-phase DC message materialization as a Pallas kernel.
+
+The paper's DC Scatter streams the PNG layout of partition ``p`` and writes
+*data-only* messages sequentially into the bin row (§3.3, Alg. 2).  Here the
+grid walks message-slot tiles (row-major (p, p') order = writing ``bin[p][:]``
+sequentially); the source partition's value tile and activity tile are
+VMEM-resident (blocked by the scalar-prefetched ``png_tile_part``), and each
+slot gathers its source's value — identity for inactive or padding slots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .segment_combine import _identity_val
+
+
+def _kernel(tile_part_ref,                       # scalar prefetch
+            x_ref, act_ref, srcl_ref, valid_ref,  # VMEM in
+            out_ref, *, monoid: str):
+    ident = _identity_val(monoid, out_ref.dtype)
+    srcl = srcl_ref[...]                          # [T] local src ids
+    x = x_ref[0, :]                               # [q] partition values
+    act = act_ref[0, :]                           # [q] partition activity
+    vals = x[srcl]
+    ok = (valid_ref[...] > 0) & (act[srcl] > 0)
+    out_ref[...] = jnp.where(ok, vals, ident)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "q", "msg_tile", "monoid",
+                                             "interpret"))
+def dc_gather(x, active, png_src_local, png_valid, png_tile_part,
+              *, k: int, q: int, msg_tile: int, monoid: str = "add",
+              interpret: bool = True):
+    """Materialize the DC message buffer.
+
+    Args:
+      x:              [k, q] per-vertex scatter values (already scatter_fn'd).
+      active:         [k, q] int32 per-vertex activity.
+      png_src_local:  [NM] int32 source id within its partition.
+      png_valid:      [NM] int32 slot validity (0 on pads).
+      png_tile_part:  [NTM] int32 source partition per slot tile.
+    Returns:
+      msg values [NM] (identity on invalid/inactive slots).
+    """
+    ntm = png_tile_part.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ntm,),
+        in_specs=[
+            pl.BlockSpec((1, q), lambda t, tp: (tp[t], 0)),
+            pl.BlockSpec((1, q), lambda t, tp: (tp[t], 0)),
+            pl.BlockSpec((msg_tile,), lambda t, tp: (t,)),
+            pl.BlockSpec((msg_tile,), lambda t, tp: (t,)),
+        ],
+        out_specs=pl.BlockSpec((msg_tile,), lambda t, tp: (t,)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, monoid=monoid),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((png_src_local.shape[0],), x.dtype),
+        interpret=interpret,
+    )(png_tile_part, x, active.astype(jnp.int32),
+      png_src_local, png_valid.astype(jnp.int32))

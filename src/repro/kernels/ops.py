@@ -1,0 +1,105 @@
+"""Layout-bound jit wrappers around the Pallas kernels.
+
+``GatherKernel`` / ``ScatterKernel`` bind a :class:`repro.graph.layout.Layout`
+once (moving the static bin-grid geometry to device) and expose the engine-
+facing API.  ``interpret=True`` runs the kernel bodies on CPU for validation;
+on TPU hardware the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as kref
+from .dc_gather import dc_gather
+from .segment_combine import segment_combine, _identity_val
+from .spmv_block import spmv_block
+
+
+class GatherKernel:
+    """Gather-phase fold bound to a layout (acc + touched over [n_pad])."""
+
+    def __init__(self, layout, monoid_name: str, dtype,
+                 interpret: bool = True):
+        self.L = layout
+        self.monoid = monoid_name
+        self.dtype = jnp.dtype(dtype)
+        self.interpret = interpret
+        self.tile_dst_part = jnp.asarray(layout.tile_dst_part)
+        self.tile_src_part = jnp.asarray(layout.tile_src_part)
+        self.tile_first = jnp.asarray(layout.tile_first.astype(np.int32))
+        self.edge_dst_local = jnp.asarray(layout.edge_dst_local)
+        self.has_tiles = jnp.asarray(
+            layout.part_has_tiles.astype(np.int32))[:, None]
+        self.ident = _identity_val(monoid_name, self.dtype)
+
+    def __call__(self, edge_vals, edge_valid, part_active):
+        L = self.L
+        acc, touched = segment_combine(
+            edge_vals, edge_valid, self.edge_dst_local,
+            self.tile_dst_part, self.tile_src_part, self.tile_first,
+            part_active, k=L.k, q=L.q, edge_tile=L.edge_tile,
+            monoid=self.monoid, interpret=self.interpret)
+        # destination partitions with no incoming tiles were never visited
+        acc = jnp.where(self.has_tiles > 0, acc, self.ident)
+        touched = jnp.where(self.has_tiles > 0, touched, 0)
+        return acc.reshape(-1), touched.reshape(-1) > 0
+
+
+class ScatterKernel:
+    """DC scatter-phase message materialization bound to a layout."""
+
+    def __init__(self, layout, monoid_name: str, dtype,
+                 interpret: bool = True):
+        self.L = layout
+        self.monoid = monoid_name
+        self.dtype = jnp.dtype(dtype)
+        self.interpret = interpret
+        self.png_src_local = jnp.asarray(layout.png_src_local)
+        self.png_valid = jnp.asarray(
+            (layout.png_src < layout.n_pad).astype(np.int32))
+        self.png_tile_part = jnp.asarray(layout.png_tile_part)
+
+    def __call__(self, x_flat, active_flat):
+        L = self.L
+        return dc_gather(
+            x_flat.reshape(L.k, L.q),
+            active_flat.astype(jnp.int32).reshape(L.k, L.q),
+            self.png_src_local, self.png_valid, self.png_tile_part,
+            k=L.k, q=L.q, msg_tile=L.msg_tile, monoid=self.monoid,
+            interpret=self.interpret)
+
+
+class SpmvKernel:
+    """Fused partition-centric SpMV bound to a layout (PageRank DC loop)."""
+
+    def __init__(self, layout, interpret: bool = True, weighted=None):
+        self.L = layout
+        self.interpret = interpret
+        self.weighted = layout.weighted if weighted is None else weighted
+        self.edge_src_local = jnp.asarray(layout.edge_src_local)
+        self.edge_dst_local = jnp.asarray(layout.edge_dst_local)
+        self.edge_valid = jnp.asarray(layout.edge_valid.astype(np.int32))
+        self.edge_w = (jnp.asarray(layout.edge_w)
+                       if (self.weighted and layout.edge_w is not None)
+                       else None)
+        self.tile_dst_part = jnp.asarray(layout.tile_dst_part)
+        self.tile_src_part = jnp.asarray(layout.tile_src_part)
+        self.tile_first = jnp.asarray(layout.tile_first.astype(np.int32))
+        self.has_tiles = jnp.asarray(
+            layout.part_has_tiles.astype(np.int32))[:, None]
+
+    def __call__(self, x_flat):
+        L = self.L
+        y = spmv_block(
+            x_flat.reshape(L.k, L.q), self.edge_src_local,
+            self.edge_dst_local, self.edge_valid, self.edge_w,
+            self.tile_dst_part, self.tile_src_part, self.tile_first,
+            k=L.k, q=L.q, edge_tile=L.edge_tile,
+            weighted=self.edge_w is not None, interpret=self.interpret)
+        return jnp.where(self.has_tiles > 0, y, 0.0).reshape(-1)
+
+
+__all__ = ["GatherKernel", "ScatterKernel", "SpmvKernel",
+           "segment_combine", "dc_gather", "spmv_block", "kref"]

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the semantic ground truth used by per-kernel allclose tests
+(interpret mode) and by the engine's non-Pallas path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _identity(monoid: str, dtype):
+    if monoid == "add":
+        return jnp.zeros((), dtype)
+    if monoid == "min":
+        return (jnp.array(jnp.inf, dtype)
+                if jnp.issubdtype(dtype, jnp.floating)
+                else jnp.array(jnp.iinfo(dtype).max, dtype))
+    if monoid == "max":
+        return (jnp.array(-jnp.inf, dtype)
+                if jnp.issubdtype(dtype, jnp.floating)
+                else jnp.array(jnp.iinfo(dtype).min, dtype))
+    raise ValueError(monoid)
+
+
+def segment_combine_ref(vals, valid, ids, num_segments, monoid="add"):
+    """Monoid fold of valid messages by destination + touched flags."""
+    ident = _identity(monoid, vals.dtype)
+    vals = jnp.where(valid.astype(bool), vals, ident)
+    if monoid == "add":
+        acc = jax.ops.segment_sum(vals, ids, num_segments=num_segments)
+    elif monoid == "min":
+        acc = jax.ops.segment_min(vals, ids, num_segments=num_segments)
+        acc = jnp.where(jnp.isinf(acc) if jnp.issubdtype(vals.dtype, jnp.floating)
+                        else acc == ident, ident, acc)
+    elif monoid == "max":
+        acc = jax.ops.segment_max(vals, ids, num_segments=num_segments)
+        acc = jnp.where(jnp.isinf(acc) if jnp.issubdtype(vals.dtype, jnp.floating)
+                        else acc == ident, ident, acc)
+    else:
+        raise ValueError(monoid)
+    touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
+                                  num_segments=num_segments) > 0
+    return acc, touched
+
+
+def dc_gather_ref(msg_x, active, png_src, png_valid, monoid="add"):
+    """Scatter-phase DC message materialization: values of active sources,
+    monoid identity elsewhere (the paper's 'scatter whole partition' with
+    array-exact no-op semantics)."""
+    ident = _identity(monoid, msg_x.dtype)
+    n_pad = msg_x.shape[0]
+    src = jnp.minimum(png_src, n_pad - 1)
+    ok = png_valid.astype(bool) & active[src]
+    return jnp.where(ok, msg_x[src], ident)
+
+
+def spmv_block_ref(x, msg_slot, png_src, edge_dst, edge_valid, edge_w,
+                   n_pad):
+    """Fused partition-centric SpMV (PageRank DC inner loop):
+    y[dst] += w * x[src] over the static dc_bin layout."""
+    nm = png_src.shape[0]
+    src = jnp.minimum(png_src, n_pad - 1)
+    msg = jnp.where(png_src < n_pad, x[src], 0.0)
+    msg_p = jnp.concatenate([msg, jnp.zeros((1,), x.dtype)])
+    ev = msg_p[jnp.minimum(msg_slot, nm)]
+    if edge_w is not None:
+        ev = ev * edge_w
+    ev = jnp.where(edge_valid.astype(bool), ev, 0.0)
+    return jax.ops.segment_sum(ev, jnp.minimum(edge_dst, n_pad),
+                               num_segments=n_pad + 1)[:n_pad]

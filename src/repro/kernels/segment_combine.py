@@ -1,0 +1,124 @@
+"""Gather-phase segmented monoid fold — the PPM hot loop, as a Pallas kernel.
+
+TPU mapping of the paper's Gather phase (§3.2):
+
+  * the grid walks gather-order (destination-major) edge tiles — reading
+    ``bin[:][p']`` column-wise exactly like the paper;
+  * the destination partition's accumulator tile (``q`` vertices) stays
+    resident in VMEM across all tiles of that partition — the paper's
+    "vertex data of partition p fits the private cache";
+  * tiles whose *source* partition has no active vertices are skipped with
+    ``pl.when`` — grid-level predication is the TPU realization of the
+    2-level active list (``binPartList``);
+  * the per-tile destination block index comes from a scalar-prefetched
+    ``tile_dst_part`` array (the static bin-grid geometry).
+
+The ``add`` fold uses an MXU-friendly one-hot matmul; ``min``/``max`` use a
+masked VPU reduce.  Outputs are (acc[k, q], touched[k, q]).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+import numpy as np
+
+
+def _identity_val(monoid: str, dtype):
+    if monoid == "add":
+        return np.zeros((), dtype)
+    if monoid == "min":
+        return (np.array(np.inf, dtype) if jnp.issubdtype(dtype, jnp.floating)
+                else np.array(np.iinfo(dtype).max, dtype))
+    if monoid == "max":
+        return (np.array(-np.inf, dtype) if jnp.issubdtype(dtype, jnp.floating)
+                else np.array(np.iinfo(dtype).min, dtype))
+    raise ValueError(monoid)
+
+
+def _kernel(tile_dst_ref, tile_src_ref, tile_first_ref,   # scalar prefetch
+            part_active_ref,                               # scalar prefetch
+            vals_ref, valid_ref, dstl_ref,                 # VMEM in
+            acc_ref, touched_ref,                          # VMEM out
+            *, monoid: str, q: int):
+    t = pl.program_id(0)
+    ident = _identity_val(monoid, acc_ref.dtype)
+
+    # first tile of this destination partition: initialize the accumulator
+    @pl.when(tile_first_ref[t] > 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, ident)
+        touched_ref[...] = jnp.zeros_like(touched_ref)
+
+    # 2-level active list: skip tiles whose source partition is inactive
+    @pl.when(part_active_ref[tile_src_ref[t]] > 0)
+    def _body():
+        vals = vals_ref[...]                                # [T]
+        valid = valid_ref[...] > 0                          # [T]
+        dstl = dstl_ref[...]                                # [T]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (vals.shape[0], q), 1)
+        onehot = (dstl[:, None] == cols) & valid[:, None]   # [T, q]
+        if monoid == "add":
+            contrib = jnp.dot(
+                jnp.where(valid, vals, 0).astype(jnp.float32)[None, :],
+                onehot.astype(jnp.float32),
+                preferred_element_type=jnp.float32)[0]
+            acc_ref[...] = acc_ref[...] + contrib.astype(acc_ref.dtype)[None, :]
+        elif monoid == "min":
+            masked = jnp.where(onehot, vals[:, None], ident)
+            acc_ref[...] = jnp.minimum(acc_ref[...],
+                                       jnp.min(masked, axis=0)[None, :])
+        elif monoid == "max":
+            masked = jnp.where(onehot, vals[:, None], ident)
+            acc_ref[...] = jnp.maximum(acc_ref[...],
+                                       jnp.max(masked, axis=0)[None, :])
+        touched_ref[...] = jnp.maximum(
+            touched_ref[...],
+            jnp.max(onehot.astype(jnp.int32), axis=0)[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "q", "edge_tile", "monoid",
+                                             "interpret"))
+def segment_combine(edge_vals, edge_valid, edge_dst_local,
+                    tile_dst_part, tile_src_part, tile_first,
+                    part_active, *, k: int, q: int, edge_tile: int,
+                    monoid: str = "add", interpret: bool = True):
+    """Fold edge messages into per-partition accumulators.
+
+    Args:
+      edge_vals:      [NE] message value per edge (gather order).
+      edge_valid:     [NE] int32 validity (pads & inactive-source slots = 0).
+      edge_dst_local: [NE] int32 destination id within its partition.
+      tile_dst_part / tile_src_part / tile_first: [NT] int32 tile geometry.
+      part_active:    [k] int32 source-partition activity (gPartList).
+    Returns:
+      acc [k, q] monoid fold, touched [k, q] int32.
+    """
+    nt = tile_dst_part.shape[0]
+    dtype = edge_vals.dtype
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((edge_tile,), lambda t, *pf: (t,)),
+            pl.BlockSpec((edge_tile,), lambda t, *pf: (t,)),
+            pl.BlockSpec((edge_tile,), lambda t, *pf: (t,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q), lambda t, td, ts, tf, pa: (td[t], 0)),
+            pl.BlockSpec((1, q), lambda t, td, ts, tf, pa: (td[t], 0)),
+        ],
+    )
+    acc, touched = pl.pallas_call(
+        functools.partial(_kernel, monoid=monoid, q=q),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((k, q), dtype),
+                   jax.ShapeDtypeStruct((k, q), jnp.int32)],
+        interpret=interpret,
+    )(tile_dst_part, tile_src_part, tile_first.astype(jnp.int32),
+      part_active.astype(jnp.int32),
+      edge_vals, edge_valid.astype(jnp.int32), edge_dst_local)
+    return acc, touched

@@ -1,0 +1,210 @@
+"""Per-cell (arch x input shape) AOT specs: step callable + ShapeDtypeStruct
+inputs + in/out shardings.
+
+``input_specs`` follows the brief: weak-type-correct, shardable stand-ins,
+no device allocation.  Frontend-stub archs (vlm/audio) receive precomputed
+patch/frame embeddings instead of tokens.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config
+from ..dist.sharding import (batch_spec, default_rules, param_shardings,
+                             set_activation_mesh)
+from ..models.config import ModelConfig
+from ..models.transformer import init_lm, lm_loss
+from ..serve.engine import decode_step, init_cache, prefill
+from ..train.optimizer import OptConfig, init_opt_state
+from ..train.train_step import make_train_step
+
+
+def _data_axes(mesh: Mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _data_extent(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _data_axes(mesh)]))
+
+
+def eval_params(cfg: ModelConfig):
+    """Shape-only params + logical axes (no allocation)."""
+    box = {}
+
+    def f(key):
+        p, a = init_lm(cfg, key)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    cdt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    shapes = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cdt), shapes)
+    return shapes, box["axes"]
+
+
+def _shard_first_divisible(shape, mesh, candidates):
+    """PartitionSpec sharding the first (dim, axis) pair that divides."""
+    spec = [None] * len(shape)
+    used = set()
+    for dim_idx, mesh_ax in candidates:
+        if mesh_ax is None or dim_idx >= len(shape):
+            continue
+        flat = tuple(mesh_ax) if isinstance(mesh_ax, (tuple, list)) \
+            else (mesh_ax,)
+        if any(a in used for a in flat):
+            continue
+        ext = int(np.prod([mesh.shape[a] for a in flat]))
+        if spec[dim_idx] is None and shape[dim_idx] % ext == 0 \
+                and shape[dim_idx] >= ext:
+            spec[dim_idx] = mesh_ax
+            used.update(flat)
+    return P(*spec)
+
+
+def cache_shardings(cfg: ModelConfig, cache_shapes, mesh: Mesh):
+    """Shardings for the KV/state cache: batch over data axes when the batch
+    divides, otherwise shard the sequence (cache width) over data — the
+    sequence-parallel path for batch-1 long-context decode."""
+    da = _data_axes(mesh)
+    da = da if len(da) > 1 else (da[0] if da else None)
+
+    def for_leaf(path_key, s):
+        shape = s.shape
+        if path_key in ("k", "v", "sk", "sv"):
+            # [L, B, W, KV, dh]
+            return _shard_first_divisible(
+                shape, mesh, [(1, da), (2, da), (4, "model"), (3, "model")])
+        if path_key == "h":        # [L, B, H, N, P]
+            return _shard_first_divisible(
+                shape, mesh, [(1, da), (2, "model")])
+        if path_key == "conv":     # [L, B, K-1, ch]
+            return _shard_first_divisible(
+                shape, mesh, [(1, da), (3, "model")])
+        if path_key == "pos":      # [B, W]
+            return _shard_first_divisible(shape, mesh, [(0, da), (1, da)])
+        return P()                 # len etc.
+
+    return {k: NamedSharding(mesh, for_leaf(k, v))
+            for k, v in cache_shapes.items()}
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               cfg: Optional[ModelConfig] = None, opt_cfg=None,
+               moe_impl: str = "dense_dp", zero1: bool = False):
+    """Returns (fn, args tuple of ShapeDtypeStructs, in_shardings,
+    out_shardings, meta).
+
+    zero1: ZeRO-1 sharding — optimizer state (master/m/v) keeps full FSDP
+    over the data axes, but COMPUTE params drop the data-axis sharding
+    (replicated per model-shard).  Trades param memory (bf16 copy
+    replicated) for eliminating the per-layer forward/backward weight
+    all-gathers; the one gather happens at the optimizer update."""
+    cfg = cfg or get_config(arch)
+    set_activation_mesh(mesh)
+    sh = SHAPES[shape_name]
+    S, GB, kind = sh["seq"], sh["batch"], sh["kind"]
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    rules = default_rules(mesh, cfg)
+    pshapes, axes = eval_params(cfg)
+    if zero1:
+        compute_rules = dict(rules, embed=None)
+        p_sh = param_shardings(axes, pshapes, mesh, compute_rules)
+    else:
+        p_sh = param_shardings(axes, pshapes, mesh, rules)
+    bspec = batch_spec(mesh)
+    rep = NamedSharding(mesh, P())
+    dx = _data_extent(mesh)
+    meta = dict(arch=arch, shape=shape_name, seq=S, batch=GB, kind=kind)
+
+    if kind == "train":
+        opt_cfg = opt_cfg or OptConfig()
+        oshapes = jax.eval_shape(
+            lambda p: init_opt_state(p, opt_cfg), pshapes)
+        opt_p_sh = (param_shardings(axes, pshapes, mesh, rules)
+                    if zero1 else p_sh)
+        opt_sh = {"m": opt_p_sh, "v": opt_p_sh, "step": rep}
+        if "master" in oshapes:
+            opt_sh["master"] = opt_p_sh
+        # microbatch so the layer-scan residuals (L x B_local x S x d x 2B,
+        # the dominant live set under remat) fit the 16 GB HBM with room
+        # for params + optimizer + collectives (budget 6 GB)
+        b_local = max(GB // dx, 1)
+        resid = cfg.n_layers * b_local * S * cfg.d_model * 2 * 2
+        microbatches = 1
+        while resid / microbatches > 6e9 and microbatches < b_local:
+            microbatches *= 2
+        if cfg.frontend is not None:
+            batch = {"embeds": jax.ShapeDtypeStruct((GB, S, cfg.d_model),
+                                                    jnp.float32),
+                     "labels": jax.ShapeDtypeStruct((GB, S), jnp.int32)}
+            b_sh = {"embeds": NamedSharding(
+                        mesh, P(*(tuple(bspec) + (None,)))),
+                    "labels": NamedSharding(mesh, bspec)}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((GB, S), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((GB, S), jnp.int32)}
+            b_sh = {k: NamedSharding(mesh, bspec) for k in batch}
+        step, _ = make_train_step(cfg, opt_cfg, mesh, moe_impl=moe_impl,
+                                  microbatches=microbatches)
+        meta["microbatches"] = microbatches
+        return (step, (pshapes, oshapes, batch),
+                (p_sh, opt_sh, b_sh), (p_sh, opt_sh, rep), meta)
+
+    if kind == "prefill":
+        if not cfg.decoder:
+            # encoder-only: the serving op is the full-sequence encode
+            def encode(params, batch):
+                from ..models.transformer import backbone, embed_frontend
+                h = embed_frontend(params, cfg, batch["embeds"], dtype)
+                pos = jnp.arange(S, dtype=jnp.int32)
+                return backbone(params, cfg, h, pos, dtype=dtype,
+                                remat=False)
+            batch = {"embeds": jax.ShapeDtypeStruct((GB, S, cfg.d_model),
+                                                    jnp.float32)}
+            b_sh = {"embeds": NamedSharding(
+                mesh, P(*(tuple(bspec) + (None,))))}
+            out_sh = NamedSharding(mesh, P(*(tuple(bspec) + (None,))))
+            return (encode, (pshapes, batch), (p_sh, b_sh), out_sh, meta)
+        cshapes = jax.eval_shape(
+            lambda: init_cache(cfg, GB, S, dtype))
+        c_sh = cache_shardings(cfg, cshapes, mesh)
+        if cfg.frontend is not None:
+            batch = {"embeds": jax.ShapeDtypeStruct((GB, S, cfg.d_model),
+                                                    jnp.float32)}
+            b_sh = {"embeds": NamedSharding(
+                mesh, P(*(tuple(bspec) + (None,))))}
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((GB, S), jnp.int32)}
+            b_sh = {"tokens": NamedSharding(mesh, bspec)}
+
+        def pf(params, batch, cache):
+            return prefill(params, cfg, batch, cache, dtype=dtype)
+
+        logit_sh = NamedSharding(mesh, _shard_first_divisible(
+            (GB, cfg.vocab), mesh,
+            [(0, _data_axes(mesh) or None), (1, "model")]))
+        return (pf, (pshapes, batch, cshapes),
+                (p_sh, b_sh, c_sh), (logit_sh, c_sh), meta)
+
+    # decode
+    cshapes = jax.eval_shape(lambda: init_cache(cfg, GB, S, dtype))
+    c_sh = cache_shardings(cfg, cshapes, mesh)
+    tokens = jax.ShapeDtypeStruct((GB,), jnp.int32)
+    t_sh = NamedSharding(mesh, _shard_first_divisible(
+        (GB,), mesh, [(0, _data_axes(mesh) or None)]))
+
+    def dec(params, tokens, cache):
+        return decode_step(params, cfg, tokens, cache, dtype=dtype)
+
+    logit_sh = NamedSharding(mesh, _shard_first_divisible(
+        (GB, cfg.vocab), mesh,
+        [(0, _data_axes(mesh) or None), (1, "model")]))
+    return (dec, (pshapes, tokens, cshapes),
+            (p_sh, t_sh, c_sh), (logit_sh, c_sh), meta)

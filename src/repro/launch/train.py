@@ -1,0 +1,119 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --steps 100 \
+      --ckpt /ckpts/yi6b [--smoke] [--microbatches 4] [--int8-grads]
+
+On a real TPU pod this is the jobset entrypoint (one process per host; jax
+distributed init happens from the environment).  Fault tolerance: SIGTERM
+triggers a checkpoint before exit; restart with the same --ckpt resumes;
+the mesh may differ across restarts (elastic re-sharding in checkpoint.py).
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_smoke_config
+from ..models.transformer import init_lm
+from ..train import (DataConfig, OptConfig, TokenPipeline, checkpoint,
+                     init_opt_state, jit_train_step, make_train_step)
+from .mesh import make_local_mesh, make_production_mesh
+
+
+class StepWatchdog:
+    """Straggler mitigation at the job level: if a step exceeds
+    ``factor`` x the trailing median, log it (on real fleets: report the
+    slow host for replacement; deterministic data means any restarted
+    worker replays identically)."""
+
+    def __init__(self, factor: float = 3.0, window: int = 20):
+        self.times, self.factor, self.window = [], factor, window
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        self.times.append(dt)
+        hist = sorted(self.times[-self.window:])
+        med = hist[len(hist) // 2]
+        slow = len(self.times) > 5 and dt > self.factor * med
+        self.flagged += int(slow)
+        return slow
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + local mesh (CPU-runnable)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--int8-grads", action="store_true")
+    ap.add_argument("--data", default=None, help="binary token file")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    seq = args.seq or (64 if args.smoke else 4096)
+    gb = args.global_batch or (8 if args.smoke else 256)
+    mesh = (make_local_mesh() if args.smoke
+            else make_production_mesh(multi_pod=args.multi_pod))
+    print(f"[train] {cfg.name} seq={seq} gb={gb} mesh={dict(mesh.shape)}")
+
+    params, axes = init_lm(cfg, jax.random.PRNGKey(0))
+    ocfg = OptConfig(total_steps=args.steps, int8_compress=args.int8_grads,
+                     compute_dtype=cfg.dtype)
+    opt = init_opt_state(params, ocfg)
+    if ocfg.compute_dtype == "bfloat16":
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.bfloat16), params)
+    step_fn, sh = make_train_step(cfg, ocfg, mesh, axes, params,
+                                  microbatches=args.microbatches)
+    jstep = jit_train_step(
+        step_fn, sh, batch_keys=("embeds", "labels") if cfg.frontend
+        else ("tokens", "labels"))
+    pipe = TokenPipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=seq, global_batch=gb, seed=0,
+        path=args.data,
+        embed_dim=cfg.d_model if cfg.frontend else None))
+
+    start = checkpoint.latest_step(args.ckpt) or 0
+    if start:
+        params, opt, start = checkpoint.restore(args.ckpt, params, opt)
+        print(f"[train] resumed at step {start}")
+
+    state = {"params": params, "opt": opt, "step": start}
+
+    def on_term(signum, frame):
+        print("[train] SIGTERM: checkpointing before exit")
+        checkpoint.save(args.ckpt, state["step"], state["params"],
+                        state["opt"])
+        sys.exit(0)
+
+    signal.signal(signal.SIGTERM, on_term)
+    wd = StepWatchdog()
+    for i in range(start, args.steps):
+        t0 = time.time()
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        params, opt, m = jstep(params, opt, batch)
+        state.update(params=params, opt=opt, step=i + 1)
+        dt = time.time() - t0
+        if wd.observe(dt):
+            print(f"[watchdog] slow step {i}: {dt:.2f}s")
+        if i % 10 == 0:
+            print(f"step {i:6d} loss {float(m['loss']):.4f} {dt:.2f}s/step")
+        if (i + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt, i + 1, params, opt)
+    checkpoint.save(args.ckpt, args.steps, params, opt)
+    print(f"[train] done ({wd.flagged} straggler steps flagged)")
+
+
+if __name__ == "__main__":
+    main()

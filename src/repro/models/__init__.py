@@ -1,0 +1,4 @@
+from .config import ModelConfig
+from .transformer import init_lm, lm_loss, backbone
+
+__all__ = ["ModelConfig", "init_lm", "lm_loss", "backbone"]

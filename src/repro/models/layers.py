@@ -1,0 +1,234 @@
+"""Transformer building blocks: RMSNorm, RoPE, chunked GQA attention, SwiGLU.
+
+Everything is pure-functional over (params pytree, inputs).  Attention is
+chunked with an online softmax (flash-attention structure in XLA) so that
+32k-token prefill never materializes an S x S score matrix.  Param init
+functions return ``(params, logical_axes)`` twin pytrees; the mapping from
+logical axes to mesh axes lives in ``repro.dist.sharding``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import constrain
+
+# ----------------------------------------------------------------------
+# param helpers
+# ----------------------------------------------------------------------
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / np.sqrt(shape[-2] if len(shape) >= 2 else shape[-1])
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def dense_param(key, d_in, d_out, axes, n_layers=None, scale=None):
+    shape = (d_in, d_out) if n_layers is None else (n_layers, d_in, d_out)
+    ax = axes if n_layers is None else ("layers",) + axes
+    return _init(key, shape, scale), ax
+
+
+# ----------------------------------------------------------------------
+# norms / rotary
+# ----------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * w.astype(x.dtype)
+
+
+def rope(x, positions, theta=10_000.0):
+    """Rotary embedding.  x: [..., S, H, dh]; positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..,S,half]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# chunked attention (online softmax)
+# ----------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None, q_offset: int = 0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024):
+    """GQA attention with flash-style chunking (contiguous positions).
+
+    q: [B, Sq, H, dh]; k, v: [B, Skv, KV, dh]; H % KV == 0.
+    Never materializes more than [B, H, q_chunk, kv_chunk] scores.  Masks are
+    derived from the *loop indices* inside checkpointed scan bodies, so XLA
+    can neither hoist a [nq, nkv, qc, kc] mask tensor out of the loops nor
+    stack per-step masks as backward residuals (both were multi-GB/TB
+    buffers in early dry-runs — see EXPERIMENTS.md §Perf).
+    """
+    B, Sq, H, dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = -(-Sq // q_chunk)
+    nkv = -(-Skv // kv_chunk)
+    qc_pad = nq * q_chunk
+    kc_pad = nkv * kv_chunk
+    scale = 1.0 / np.sqrt(dh)
+
+    qp = jnp.pad(q, ((0, 0), (0, qc_pad - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, kc_pad - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kc_pad - Skv), (0, 0), (0, 0)))
+
+    qs = qp.reshape(B, nq, q_chunk, H, dh).transpose(1, 0, 3, 2, 4)
+    ks = kp.reshape(B, nkv, kv_chunk, KV, dh).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, nkv, kv_chunk, KV, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qin):
+        qi, iq = qin                          # [B,H,qc,dh], scalar index
+        qpos = iq * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def kv_step(carry, kin):
+            m, l, acc = carry
+            kj, vj, jk = kin                  # [B,kc,KV,dh] x2, index
+            kpos = jk * kv_chunk + jnp.arange(kv_chunk)
+            kj = kj.transpose(0, 2, 1, 3)     # [B,KV,kc,dh]
+            vj = vj.transpose(0, 2, 1, 3)
+            qg = qi.reshape(B, KV, G, q_chunk, dh)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qg.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            mask = (kpos < Skv)[None, :]
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window is not None:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bkcd->bkgqd", p,
+                            vj.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (ks, vs, jnp.arange(nkv)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.reshape(B, H, q_chunk, dh)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None,
+                           (qs, jnp.arange(nq)))   # [nq,B,H,qc,dh]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, qc_pad, H, dh)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, q_position, kv_positions,
+                     kv_valid, window: Optional[int] = None):
+    """Single-step attention against a KV cache.  q: [B, 1, H, dh]."""
+    B, _, H, dh = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(dh)
+    qg = q[:, 0].reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    mask = kv_valid[:, None, None, :] & \
+        (kv_positions[:, None, None, :] <= q_position[:, None, None, None])
+    if window is not None:
+        mask = mask & (q_position[:, None, None, None]
+                       - kv_positions[:, None, None, :] < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# GQA attention layer
+# ----------------------------------------------------------------------
+
+def attention_params(key, cfg, n_layers=None, prefix_shared=False):
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    d_in = 2 * d if prefix_shared else d    # zamba2 concat(hidden, residual)
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_param(ks[0], d_in, H * dh, ("embed", "heads"),
+                                   n_layers)
+    p["wk"], a["wk"] = dense_param(ks[1], d_in, KV * dh, ("embed", "kv"),
+                                   n_layers)
+    p["wv"], a["wv"] = dense_param(ks[2], d_in, KV * dh, ("embed", "kv"),
+                                   n_layers)
+    p["wo"], a["wo"] = dense_param(ks[3], H * dh, d, ("heads", "embed"),
+                                   n_layers)
+    if cfg.qkv_bias:
+        shp = (H * dh,) if n_layers is None else (n_layers, H * dh)
+        shk = (KV * dh,) if n_layers is None else (n_layers, KV * dh)
+        ax1 = ("heads",) if n_layers is None else ("layers", "heads")
+        ax2 = ("kv",) if n_layers is None else ("layers", "kv")
+        p["bq"], a["bq"] = jnp.zeros(shp), ax1
+        p["bk"], a["bk"] = jnp.zeros(shk), ax2
+        p["bv"], a["bv"] = jnp.zeros(shk), ax2
+    return p, a
+
+
+def attention_fwd(p, cfg, x, positions, *, window=None, dtype=jnp.bfloat16):
+    """Full-sequence attention (train / prefill).  x: [B, S, d_in]."""
+    B, S, _ = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    ah = cfg.act_axis("heads")
+    q = constrain(x @ p["wq"].astype(dtype), "batch", None, ah)
+    k = constrain(x @ p["wk"].astype(dtype), "batch", None,
+                  cfg.act_axis("kv"))
+    v = constrain(x @ p["wv"].astype(dtype), "batch", None,
+                  cfg.act_axis("kv"))
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, KV, dh)
+    v = v.reshape(B, S, KV, dh)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype).reshape(H, dh)
+        k = k + p["bk"].astype(dtype).reshape(KV, dh)
+        v = v + p["bv"].astype(dtype).reshape(KV, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=cfg.causal, window=window)
+    out = constrain(out.reshape(B, S, H * dh), "batch", None, ah)
+    return constrain(out @ p["wo"].astype(dtype),
+                     "batch", None, None), (k, v)
+
+
+# ----------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------
+
+def mlp_params(key, d, ff, n_layers=None):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["w1"], a["w1"] = dense_param(ks[0], d, ff, ("embed", "ff"), n_layers)
+    p["w3"], a["w3"] = dense_param(ks[1], d, ff, ("embed", "ff"), n_layers)
+    p["w2"], a["w2"] = dense_param(ks[2], ff, d, ("ff", "embed"), n_layers)
+    return p, a
+
+
+def mlp_fwd(p, x, dtype=jnp.bfloat16, constrained: bool = True):
+    # constrained=False inside shard_map bodies (with_sharding_constraint
+    # may not name manual mesh axes)
+    h = jax.nn.silu(x @ p["w1"].astype(dtype)) * (x @ p["w3"].astype(dtype))
+    if constrained:
+        h = constrain(h, "batch", None, "model")
+        return constrain(h @ p["w2"].astype(dtype), "batch", None, None)
+    return h @ p["w2"].astype(dtype)

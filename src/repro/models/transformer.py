@@ -1,0 +1,259 @@
+"""Full LM assembly: embedding -> scanned blocks -> tied head.
+
+Families:
+  dense / moe          pre-norm GQA attention + SwiGLU / MoE
+  ssm                  Mamba2 (SSD) blocks, attention-free
+  hybrid (zamba2)      Mamba2 backbone + ONE weight-shared attention+MLP
+                       block invoked every ``attn_every`` layers on
+                       concat(hidden, initial_embedding)
+  vlm / audio          stub frontend: precomputed patch/frame embeddings
+                       (projected) feed the text backbone
+
+Layers are stacked and scanned (compile-time O(1) in depth); remat wraps the
+scan body.  Caches are layer-stacked pytrees threaded through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from ..dist.sharding import constrain
+from .config import ModelConfig
+from .layers import (attention_fwd, attention_params, chunked_attention,
+                     decode_attention, mlp_fwd, mlp_params, rms_norm, rope)
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def init_lm(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    L, d = cfg.n_layers, cfg.d_model
+    p = {"embed": jax.random.normal(ks[0], (cfg.vocab, d)) * 0.02}
+    a = {"embed": ("vocab", "embed")}
+    p["final_norm"] = jnp.ones((d,))
+    a["final_norm"] = (None,)
+    layers_p, layers_a = {}, {}
+    if cfg.family in ("ssm", "hybrid"):
+        sp, sa = ssm_lib.ssm_params(ks[1], cfg, n_layers=L)
+        layers_p["ssm"], layers_a["ssm"] = sp, sa
+        layers_p["ln"] = jnp.ones((L, d))
+        layers_a["ln"] = ("layers", None)
+        if cfg.family == "hybrid" and cfg.attn_every:
+            shp, sha = {}, {}
+            ap, aa = attention_params(ks[2], cfg, prefix_shared=True)
+            shp["attn"], sha["attn"] = ap, aa
+            mp, ma = mlp_params(ks[3], d, cfg.d_ff)
+            shp["mlp"], sha["mlp"] = mp, ma
+            shp["ln1"] = jnp.ones((2 * d,))
+            sha["ln1"] = (None,)
+            shp["ln2"] = jnp.ones((d,))
+            sha["ln2"] = (None,)
+            p["shared"], a["shared"] = shp, sha
+    else:
+        ap, aa = attention_params(ks[1], cfg, n_layers=L)
+        layers_p["attn"], layers_a["attn"] = ap, aa
+        if cfg.is_moe:
+            mp, ma = moe_lib.moe_params(ks[2], cfg, n_layers=L)
+            layers_p["moe"], layers_a["moe"] = mp, ma
+        else:
+            mp, ma = mlp_params(ks[2], d, cfg.d_ff, n_layers=L)
+            layers_p["mlp"], layers_a["mlp"] = mp, ma
+        layers_p["ln1"] = jnp.ones((L, d))
+        layers_a["ln1"] = ("layers", None)
+        layers_p["ln2"] = jnp.ones((L, d))
+        layers_a["ln2"] = ("layers", None)
+    p["layers"], a["layers"] = layers_p, layers_a
+    if cfg.frontend is not None:
+        p["frontend_proj"] = jax.random.normal(ks[4], (d, d)) / np.sqrt(d)
+        a["frontend_proj"] = ("embed", None)
+    return p, a
+
+
+# ----------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ----------------------------------------------------------------------
+
+def _dense_block(pl, cfg, x, positions, dtype):
+    h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    atile, kv = attention_fwd(pl["attn"], cfg, h, positions,
+                              window=cfg.swa_window, dtype=dtype)
+    x = x + atile
+    h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        x = x + moe_lib.moe_fwd(pl["moe"], cfg, h, dtype=dtype)
+    else:
+        x = x + mlp_fwd(pl["mlp"], h, dtype)
+    return x, kv
+
+
+def _shared_block(sp, cfg, x, x0, positions, dtype, cache=None,
+                  decode=False, cache_ctx=None):
+    """Zamba2 shared attention+MLP on concat(hidden, initial embedding)."""
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = rms_norm(cat, sp["ln1"], cfg.norm_eps)
+    if not decode:
+        atile, kv = attention_fwd(sp["attn"], cfg, h, positions,
+                                  window=cfg.swa_window, dtype=dtype)
+    else:
+        k_c, v_c, pos_c, q_pos = cache_ctx
+        B = x.shape[0]
+        H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+        q = (h @ sp["attn"]["wq"].astype(dtype)).reshape(B, 1, H, dh)
+        k = (h @ sp["attn"]["wk"].astype(dtype)).reshape(B, 1, KV, dh)
+        v = (h @ sp["attn"]["wv"].astype(dtype)).reshape(B, 1, KV, dh)
+        q = rope(q, q_pos[:, None], cfg.rope_theta)
+        k = rope(k, q_pos[:, None], cfg.rope_theta)
+        kv = (k, v)
+        W = k_c.shape[1]
+        slot = (q_pos % W).astype(jnp.int32)
+        k_c = k_c.at[jnp.arange(B), slot].set(k[:, 0])
+        v_c = v_c.at[jnp.arange(B), slot].set(v[:, 0])
+        atile = decode_attention(
+            q, k_c, v_c, q_position=q_pos,
+            kv_positions=pos_c, kv_valid=pos_c >= 0,
+            window=cfg.swa_window)
+        atile = atile.reshape(B, 1, H * dh) @ sp["attn"]["wo"].astype(dtype)
+        kv = (k_c, v_c)
+    x = x + atile
+    h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    x = x + mlp_fwd(sp["mlp"], h, dtype)
+    return x, kv
+
+
+def backbone(params, cfg: ModelConfig, h, positions, *, dtype=jnp.bfloat16,
+             remat: bool = True, collect_cache: bool = False):
+    """h: [B, S, d] -> [B, S, d].  collect_cache returns per-layer KV/state."""
+    L = cfg.n_layers
+    h = constrain(h, "batch", None, None)
+    x0 = h
+    ckpt = (functools.partial(
+        jax.checkpoint,
+        policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        if cfg.remat_policy == "dots" else jax.checkpoint)
+
+    if cfg.family in ("ssm", "hybrid"):
+        ae = cfg.attn_every
+        n_inv = (L + ae - 1) // ae if (cfg.family == "hybrid" and ae) else 0
+
+        def body(carry, inp):
+            x, shared_kv = carry
+            pl, i = inp
+            hh = rms_norm(x, pl["ln"], cfg.norm_eps)
+            x = constrain(x, "batch", None, None)
+            if collect_cache:
+                out, hT, conv = ssm_lib.ssm_block_fwd(
+                    pl["ssm"], cfg, hh, dtype=dtype, return_state=True)
+            else:
+                out = ssm_lib.ssm_block_fwd(pl["ssm"], cfg, hh, dtype=dtype)
+                hT = conv = None
+            x = x + out
+            if n_inv:
+                def with_attn(x):
+                    return _shared_block(params["shared"], cfg, x, x0,
+                                         positions, dtype)
+                def no_attn(x):
+                    B, S, _ = x.shape
+                    z = (jnp.zeros((B, S, cfg.n_kv, cfg.d_head), dtype),) * 2
+                    return x, z
+                x, kv = jax.lax.cond(i % ae == ae - 1, with_attn, no_attn, x)
+                inv = i // ae
+                if collect_cache:
+                    shared_kv = (
+                        jax.lax.dynamic_update_index_in_dim(
+                            shared_kv[0], kv[0], inv, 0),
+                        jax.lax.dynamic_update_index_in_dim(
+                            shared_kv[1], kv[1], inv, 0))
+            return (x, shared_kv), (hT, conv)
+
+        if remat:
+            body = ckpt(body)
+        B, S, _ = h.shape
+        skv0 = None
+        if n_inv:
+            skv0 = (jnp.zeros((n_inv, B, S, cfg.n_kv, cfg.d_head), dtype),
+                    jnp.zeros((n_inv, B, S, cfg.n_kv, cfg.d_head), dtype))
+        (x, skv), states = jax.lax.scan(
+            body, (h, skv0),
+            (params["layers"], jnp.arange(L, dtype=jnp.int32)))
+        if collect_cache:
+            return x, dict(ssm_h=states[0], ssm_conv=states[1],
+                           shared_kv=skv)
+        return x
+
+    def body(x, inp):
+        pl, i = inp
+        x, kv = _dense_block(pl, cfg, x, positions, dtype)
+        x = constrain(x, "batch", None, None)
+        return x, kv if collect_cache else None
+
+    if remat:
+        body = ckpt(body)
+    x, kvs = jax.lax.scan(body, h,
+                          (params["layers"],
+                           jnp.arange(L, dtype=jnp.int32)))
+    if collect_cache:
+        return x, dict(k=kvs[0], v=kvs[1])
+    return x
+
+
+def embed_tokens(params, cfg, tokens, dtype):
+    return params["embed"].astype(dtype)[tokens]
+
+
+def embed_frontend(params, cfg, embeds, dtype):
+    return embeds.astype(dtype) @ params["frontend_proj"].astype(dtype)
+
+
+def lm_head_chunked(params, cfg, x, labels, *, chunk: int = 512,
+                    dtype=jnp.bfloat16):
+    """Per-token CE without materializing [B, S, V] (scan over seq chunks)."""
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert S % chunk == 0, "seq must divide the loss chunk"
+    emb = params["embed"].astype(dtype)
+    norm = params["final_norm"]
+    xs = x.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def step(tot, inp):
+        xc, lc = inp
+        hc = rms_norm(xc, norm, cfg.norm_eps)
+        logits = (hc @ emb.T).astype(jnp.float32)              # [B,c,V]
+        logits = constrain(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None],
+                                   axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    # checkpoint: recompute chunk logits in backward instead of stacking
+    # [nc, B, chunk, V] residuals (multi-GB at 32k seq)
+    tot, _ = jax.lax.scan(jax.checkpoint(step),
+                          jnp.zeros((), jnp.float32), (xs, ls))
+    return tot / (B * S)
+
+
+def lm_logits_last(params, cfg, x, dtype=jnp.bfloat16):
+    h = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return (h @ params["embed"].astype(dtype).T).astype(jnp.float32)
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, dtype=jnp.bfloat16,
+            remat: bool = True):
+    """batch: {"tokens": [B,S]} or {"embeds": [B,S,d]} + {"labels": [B,S]}."""
+    if cfg.frontend is not None and "embeds" in batch:
+        h = embed_frontend(params, cfg, batch["embeds"], dtype)
+    else:
+        h = embed_tokens(params, cfg, batch["tokens"], dtype)
+    B, S = h.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = backbone(params, cfg, h, positions, dtype=dtype, remat=remat)
+    return lm_head_chunked(params, cfg, x, batch["labels"], dtype=dtype)

@@ -1,0 +1,1 @@
+from .engine import Server, Request, init_cache, prefill, decode_step

@@ -1,0 +1,288 @@
+"""Serving: KV/state caches, prefill + single-token decode, and a slot-based
+continuous-batching server loop.
+
+Cache layouts (layer-stacked so decode scans layers exactly like training):
+  attention archs: k/v [L, B, W, KV, dh]  (W = window for SWA else max_len),
+                   pos [B, W] absolute positions (-1 empty), len [B]
+  ssm archs:       h [L, B, H, N, P] f32, conv [L, B, K-1, di+2N], len [B]
+  hybrid:          ssm fields + shared-attn caches sk/sv
+                   [n_inv, B, W, KV, dh]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import moe as moe_lib
+from ..models import ssm as ssm_lib
+from ..models.config import ModelConfig
+from ..models.layers import (decode_attention, mlp_fwd, rms_norm, rope)
+from ..models.transformer import (_shared_block, backbone, embed_tokens,
+                                  lm_logits_last)
+
+
+# ----------------------------------------------------------------------
+# cache init
+# ----------------------------------------------------------------------
+
+def cache_width(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int, dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    c = {"len": jnp.zeros((B,), jnp.int32)}
+    if cfg.family in ("ssm", "hybrid"):
+        H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        c["h"] = jnp.zeros((L, B, H, N, P), jnp.float32)
+        c["conv"] = jnp.zeros((L, B, cfg.ssm_conv - 1, ch), dtype)
+        if cfg.family == "hybrid" and cfg.attn_every:
+            W = cache_width(cfg, max_len)
+            n_inv = (L + cfg.attn_every - 1) // cfg.attn_every
+            c["sk"] = jnp.zeros((n_inv, B, W, cfg.n_kv, cfg.d_head), dtype)
+            c["sv"] = jnp.zeros((n_inv, B, W, cfg.n_kv, cfg.d_head), dtype)
+            c["pos"] = jnp.full((B, W), -1, jnp.int32)
+    else:
+        W = cache_width(cfg, max_len)
+        c["k"] = jnp.zeros((L, B, W, cfg.n_kv, cfg.d_head), dtype)
+        c["v"] = jnp.zeros((L, B, W, cfg.n_kv, cfg.d_head), dtype)
+        c["pos"] = jnp.full((B, W), -1, jnp.int32)
+    return c
+
+
+# ----------------------------------------------------------------------
+# prefill
+# ----------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, dtype=jnp.bfloat16):
+    """Fill the cache from a full prompt.  batch: tokens [B,S] or embeds.
+    Assumes all B rows share length S (per-slot prefill in the server)."""
+    if cfg.frontend is not None and "embeds" in batch:
+        from ..models.transformer import embed_frontend
+        h = embed_frontend(params, cfg, batch["embeds"], dtype)
+    else:
+        h = embed_tokens(params, cfg, batch["tokens"], dtype)
+    B, S = h.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, states = backbone(params, cfg, h, positions, dtype=dtype,
+                         remat=False, collect_cache=True)
+    logits = lm_logits_last(params, cfg, x, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        cache = dict(cache, h=states["ssm_h"],
+                     conv=states["ssm_conv"].astype(cache["conv"].dtype),
+                     len=jnp.full((B,), S, jnp.int32))
+        if "sk" in cache:
+            W = cache["sk"].shape[2]
+            slots = positions % W
+            sk = cache["sk"].at[:, :, slots].set(
+                states["shared_kv"][0].astype(cache["sk"].dtype)
+                .transpose(0, 1, 2, 3, 4))
+            sv = cache["sv"].at[:, :, slots].set(
+                states["shared_kv"][1].astype(cache["sv"].dtype))
+            pos = cache["pos"].at[:, slots].set(positions[None, :])
+            cache = dict(cache, sk=sk, sv=sv, pos=pos)
+    else:
+        W = cache["k"].shape[2]
+        slots = positions % W
+        k = cache["k"].at[:, :, slots].set(
+            states["k"].astype(cache["k"].dtype))
+        v = cache["v"].at[:, :, slots].set(
+            states["v"].astype(cache["v"].dtype))
+        pos = cache["pos"].at[:, slots].set(positions[None, :])
+        cache = dict(cache, k=k, v=v, pos=pos,
+                     len=jnp.full((B,), S, jnp.int32))
+    return logits[:, 0], cache
+
+
+# ----------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------
+
+def _dense_decode_block(pl, cfg, x, kc, vc, pos_c, q_pos, dtype):
+    B = x.shape[0]
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+    q = (h @ pl["attn"]["wq"].astype(dtype)).reshape(B, 1, H, dh)
+    k = (h @ pl["attn"]["wk"].astype(dtype)).reshape(B, 1, KV, dh)
+    v = (h @ pl["attn"]["wv"].astype(dtype)).reshape(B, 1, KV, dh)
+    if cfg.qkv_bias:
+        q = q + pl["attn"]["bq"].astype(dtype).reshape(H, dh)
+        k = k + pl["attn"]["bk"].astype(dtype).reshape(KV, dh)
+        v = v + pl["attn"]["bv"].astype(dtype).reshape(KV, dh)
+    q = rope(q, q_pos[:, None], cfg.rope_theta)
+    k = rope(k, q_pos[:, None], cfg.rope_theta)
+    W = kc.shape[1]
+    slot = (q_pos % W).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    kc = kc.at[bidx, slot].set(k[:, 0].astype(kc.dtype))
+    vc = vc.at[bidx, slot].set(v[:, 0].astype(vc.dtype))
+    a = decode_attention(q, kc, vc, q_position=q_pos, kv_positions=pos_c,
+                         kv_valid=pos_c >= 0, window=cfg.swa_window)
+    x = x + a.reshape(B, 1, H * dh) @ pl["attn"]["wo"].astype(dtype)
+    h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        x = x + moe_lib.moe_fwd(pl["moe"], cfg, h, dtype=dtype)
+    else:
+        x = x + mlp_fwd(pl["mlp"], h, dtype)
+    return x, kc, vc
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, *,
+                dtype=jnp.bfloat16):
+    """One token for every active slot.  tokens: [B] int32."""
+    B = tokens.shape[0]
+    x = embed_tokens(params, cfg, tokens[:, None], dtype)
+    q_pos = cache["len"]
+    L = cfg.n_layers
+
+    if cfg.family in ("ssm", "hybrid"):
+        ae = cfg.attn_every
+        hybrid = "sk" in cache
+        if hybrid:
+            W = cache["sk"].shape[2]
+            slot = (q_pos % W).astype(jnp.int32)
+            new_pos = cache["pos"].at[jnp.arange(B), slot].set(q_pos)
+        x0 = x
+
+        def body(carry, inp):
+            x, sk, sv = carry
+            pl, hst, conv, i = inp
+            hh = rms_norm(x, pl["ln"], cfg.norm_eps)
+            out, h2, conv2 = ssm_lib.ssm_block_decode(
+                pl["ssm"], cfg, hh, hst, conv, dtype=dtype)
+            x = x + out
+            if hybrid:
+                inv = i // ae
+
+                def with_attn(opd):
+                    x, sk, sv = opd
+                    kc = sk[inv]
+                    vc = sv[inv]
+                    x2, (kc2, vc2) = _shared_block(
+                        params["shared"], cfg, x, x0, None, dtype,
+                        decode=True,
+                        cache_ctx=(kc, vc, new_pos, q_pos))
+                    sk = jax.lax.dynamic_update_index_in_dim(sk, kc2, inv, 0)
+                    sv = jax.lax.dynamic_update_index_in_dim(sv, vc2, inv, 0)
+                    return x2, sk, sv
+
+                x, sk, sv = jax.lax.cond(
+                    i % ae == ae - 1, with_attn, lambda o: o, (x, sk, sv))
+            return (x, sk, sv), (h2, conv2)
+
+        sk0 = cache.get("sk")
+        sv0 = cache.get("sv")
+        (x, sk, sv), (h_new, conv_new) = jax.lax.scan(
+            body, (x, sk0, sv0),
+            (params["layers"], cache["h"], cache["conv"],
+             jnp.arange(L, dtype=jnp.int32)))
+        cache = dict(cache, h=h_new, conv=conv_new,
+                     len=cache["len"] + 1)
+        if hybrid:
+            cache = dict(cache, sk=sk, sv=sv, pos=new_pos)
+    else:
+        W = cache["k"].shape[2]
+        slot = (q_pos % W).astype(jnp.int32)
+        new_pos = cache["pos"].at[jnp.arange(B), slot].set(q_pos)
+
+        def body(x, inp):
+            pl, kc, vc = inp
+            x, kc, vc = _dense_decode_block(pl, cfg, x, kc, vc, new_pos,
+                                            q_pos, dtype)
+            return x, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        cache = dict(cache, k=k_new, v=v_new, pos=new_pos,
+                     len=cache["len"] + 1)
+    logits = lm_logits_last(params, cfg, x, dtype)
+    return logits[:, 0], cache
+
+
+# ----------------------------------------------------------------------
+# slot-based batched server
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int = 32
+    out: Optional[list] = None
+
+
+class Server:
+    """Continuous batching over B fixed slots (greedy decoding)."""
+
+    def __init__(self, params, cfg: ModelConfig, n_slots: int = 4,
+                 max_len: int = 512, dtype=jnp.bfloat16):
+        self.params, self.cfg = params, cfg
+        self.B, self.max_len = n_slots, max_len
+        self.dtype = dtype
+        self.cache = init_cache(cfg, n_slots, max_len, dtype)
+        self.free = list(range(n_slots))
+        self.active = {}                       # slot -> Request
+        self.queue = []
+        self.done = []
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c, dtype=dtype))
+        self._next_tok = np.zeros(n_slots, np.int32)
+
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    def _prefill_into_slot(self, slot: int, req: Request):
+        # single-row prefill, then splice the row into the batched cache
+        row_cache = init_cache(self.cfg, 1, self.max_len, self.dtype)
+        toks = jnp.asarray(req.prompt[None, :])
+        logits, row_cache = prefill(self.params, self.cfg,
+                                    {"tokens": toks}, row_cache,
+                                    dtype=self.dtype)
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+        self._next_tok[slot] = tok
+
+        # layer-stacked entries carry batch on axis 1; per-slot on axis 0
+        LAYER_STACKED = ("k", "v", "h", "conv", "sk", "sv")
+
+        def splice_entry(k):
+            if k in LAYER_STACKED:
+                return self.cache[k].at[:, slot].set(row_cache[k][:, 0])
+            return self.cache[k].at[slot].set(row_cache[k][0])
+
+        self.cache = {k: splice_entry(k) for k in self.cache}
+        self.active[slot] = req
+
+    def step(self):
+        """One scheduler tick: admit new requests, then decode one token."""
+        while self.free and self.queue:
+            slot = self.free.pop()
+            self._prefill_into_slot(slot, self.queue.pop(0))
+        if not self.active:
+            return False
+        toks = jnp.asarray(self._next_tok)
+        logits, self.cache = self._decode(self.params, toks, self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for slot, req in list(self.active.items()):
+            req.out.append(int(nxt[slot]))
+            self._next_tok[slot] = int(nxt[slot])
+            if len(req.out) >= req.max_new:
+                finished.append(slot)
+        for slot in finished:
+            self.done.append(self.active.pop(slot))
+            self.free.append(slot)
+        return True
+
+    def run(self, max_ticks: int = 10_000):
+        t = 0
+        while (self.queue or self.active) and t < max_ticks:
+            self.step()
+            t += 1
+        return self.done

@@ -1,0 +1,4 @@
+from .optimizer import OptConfig, adamw_update, init_opt_state, lr_at
+from .train_step import make_train_step, jit_train_step
+from .data import DataConfig, TokenPipeline
+from . import checkpoint

@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single host device.  The 512-device environment is ONLY
+# for launch/dryrun.py (set there before any jax import); distributed tests
+# spawn subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,64 @@
+"""HLO cost walker: exact on known graphs, trip-count-aware on loops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.hlo_cost import HloCostModel, analyze
+
+
+def test_matmul_exact():
+    x = jnp.zeros((256, 256), jnp.float32)
+    c = jax.jit(lambda x: x @ x).lower(x).compile()
+    a = analyze(c.as_text())
+    assert a["flops"] == 2 * 256 ** 3
+
+
+def test_scan_trip_count_scaling():
+    x = jnp.zeros((128, 128), jnp.float32)
+
+    def ten(x):
+        def body(c, _):
+            return c @ c + 1.0, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    c = jax.jit(ten).lower(x).compile()
+    a = analyze(c.as_text())
+    exp = 10 * 2 * 128 ** 3
+    assert abs(a["flops"] - exp) / exp < 0.05
+
+
+def test_nested_scan():
+    x = jnp.zeros((64, 64), jnp.float32)
+
+    def nested(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ c2, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    c = jax.jit(nested).lower(x).compile()
+    a = analyze(c.as_text())
+    exp = 15 * 2 * 64 ** 3
+    assert abs(a["flops"] - exp) / exp < 0.05
+
+
+def test_batched_dot_flops():
+    a = jnp.zeros((8, 32, 64), jnp.float32)
+    b = jnp.zeros((8, 64, 16), jnp.float32)
+    c = jax.jit(lambda a, b: jnp.einsum("bik,bkj->bij", a, b)) \
+        .lower(a, b).compile()
+    r = analyze(c.as_text())
+    assert r["flops"] == 2 * 8 * 32 * 64 * 16
+
+
+def test_dtype_bytes_parsing():
+    from repro.hlo_cost import _bytes_of
+    assert _bytes_of("f32[2,3]") == 24
+    assert _bytes_of("bf16[4]") == 8
+    assert _bytes_of("(f32[2], s32[3]{0})") == 20
+    assert _bytes_of("pred[7]") == 7
+    assert _bytes_of("s32[]") == 4

@@ -1,0 +1,53 @@
+"""Re-derive roofline terms for every cell from the saved HLO dumps —
+no recompilation (analysis-model changes apply retroactively).
+
+  PYTHONPATH=src python tools/rederive.py
+"""
+import glob
+import gzip
+import json
+import os
+
+from repro.hlo_cost import analyze
+from repro.roofline import roofline_terms
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "results", "dryrun")
+
+
+def main():
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        if "FAILED" in jf:
+            continue
+        tag = os.path.basename(jf)[:-5]
+        r = json.load(open(jf))
+        # reconstruct the hlo dump name the way dryrun.summarize builds it
+        mesh_tag = "pod2x16x16" if r["chips"] == 512 else "pod16x16"
+        hlo_tag = f"{r['arch']}_{r['shape']}_{mesh_tag}"
+        if r.get("variant"):
+            hlo_tag += f"_v_{r['variant']}"
+        hf = os.path.join(RESULTS, "hlo", hlo_tag + ".hlo.gz")
+        if not os.path.exists(hf):
+            hf = os.path.join(RESULTS, "hlo", tag + ".hlo.gz")
+        if not os.path.exists(hf):
+            print("no hlo for", tag)
+            continue
+        hlo = gzip.open(hf, "rt").read()
+        walk = analyze(hlo, default_group=r["chips"])
+        r["flops_per_dev"] = float(walk["flops"])
+        r["bytes_per_dev"] = float(walk["bytes"])
+        r["wire_bytes_per_dev"] = float(walk["wire_bytes"])
+        r["coll_counts"] = walk["coll_counts"]
+        r["roofline"] = roofline_terms(walk["flops"], walk["bytes"],
+                                       walk["wire_bytes"])
+        mf = r.get("model_flops_total")
+        r["useful_ratio"] = (mf / (walk["flops"] * r["chips"])
+                             if mf and walk["flops"] else None)
+        json.dump(r, open(jf, "w"), indent=1, default=str)
+        n += 1
+    print(f"re-derived {n} cells")
+
+
+if __name__ == "__main__":
+    main()
