@@ -21,7 +21,7 @@ _CODE = """
 import os, json, time
 import numpy as np
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.dist.compat import AxisType, make_mesh
 from repro.graph import rmat, build_layout
 from repro.graph.shard import shard_layout
 from repro.core.dist_engine import DistEngine
@@ -29,7 +29,7 @@ from repro.apps.bfs import bfs_program
 from repro.apps.pagerank import pagerank_program
 
 D = {D}
-mesh = jax.make_mesh((D,), ("dev",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((D,), ("dev",), axis_types=(AxisType.Auto,))
 g = rmat({scale}, 16, seed=1)
 L = build_layout(g, k=max(16, 4*D), edge_tile=64, msg_tile=32)
 SL = shard_layout(L, D)

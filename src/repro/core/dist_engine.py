@@ -1,472 +1,7 @@
-"""Distributed PPM engine: shard_map + all_to_all over the device mesh.
+"""Backward-compat shim: the distributed PPM engine moved to
+``repro.dist.engine`` (the home of all multi-device machinery)."""
+from ..dist.engine import (DistEngine, build_dc_step, build_hybrid_step,
+                           build_sc_step)
 
-The BSP structure of the paper maps 1:1 onto collectives (DESIGN.md §2):
-
-  Scatter (per device, local)   -> message buffer out[D, S] (DC) or
-                                   ragged compaction (SC)
-  barrier + bin exchange        -> all_to_all / ragged_all_to_all
-  Gather (per device, local)    -> segmented monoid fold over the statically
-                                   resident dc_bin adjacency
-
-DC mode sends *values only* (+1 validity byte, see DESIGN.md); SC mode sends
-(value, dst-id) pairs with wire bytes proportional to active edges.  Mode
-selection: ``mode='hybrid'`` applies the aggregated Eq. 1 model per
-iteration; ``mode='hybrid_pp'`` applies it per PARTITION (the paper's exact
-granularity) and runs both streams in one superstep.
-"""
-from __future__ import annotations
-
-import dataclasses
-import functools
-import time
-from typing import Optional, Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from .program import VertexProgram
-from .engine import _tree_where
-
-
-def _squeeze0(tree):
-    return jax.tree_util.tree_map(lambda a: a[0], tree)
-
-
-def build_dc_step(program: VertexProgram, meta: dict,
-                  axis_names: Sequence[str], dense_frontier: bool = False,
-                  wire_bf16: bool = False):
-    """Destination-centric distributed iteration (per-device body).
-
-    dense_frontier: the app keeps every vertex active every iteration
-    (paper's PageRank) — the validity-flag exchange is constant and is
-    skipped entirely, halving the small-payload side of the bin exchange.
-    wire_bf16: cast f32 message values to bf16 on the wire (beyond-paper
-    message compression; exact for BFS/CC ids <= 2^24, approximate for
-    float accumulations)."""
-    mono = program.monoid
-    nv, S, D = meta["nv"], meta["S"], meta["D"]
-    weighted = meta["weighted"]
-    axes = tuple(axis_names)
-    compress = wire_bf16 and mono.dtype == jnp.float32
-    # wire dtype used end-to-end from scatter through the gather-side slot
-    # lookup: adjacent up/down-cast pairs around the collective get
-    # cancelled by XLA's algebraic simplifier (observed), so the narrow
-    # dtype must live across the whole exchange
-    wdt = jnp.bfloat16 if compress else mono.dtype
-
-    def step(state, active, arrays, it):
-        # state/active: [nv] shard; arrays: per-device slices (leading 1)
-        A = _squeeze0(arrays)
-        msgs = program.scatter_fn(state).astype(wdt)          # [nv]
-        ident = jnp.asarray(mono.identity, wdt)
-
-        if program.init_fn is not None:
-            st2, keep = program.init_fn(state, it)
-            state = _tree_where(active, st2, state)
-            keep = keep & active
-        else:
-            keep = jnp.zeros((nv,), jnp.bool_)
-
-        # ---- scatter: fill the bin row (values only) ----
-        srcl = A["out_src_local"]                             # [D, S]
-        flag = A["out_valid"] & active[srcl]
-        out_vals = jnp.where(flag, msgs[srcl], ident)
-
-        # ---- bin exchange (the BSP barrier) ----
-        if compress:
-            # two bf16 messages bitcast-packed per u32 lane: XLA sinks
-            # plain converts through collectives (cancelling the pair, wire
-            # stays f32 — observed on XLA:CPU); bitcasts cannot be cancelled,
-            # so the wire really carries half the bytes
-            packed = jax.lax.bitcast_convert_type(
-                out_vals.reshape(D, S // 2, 2), jnp.uint32)
-            recv_p = jax.lax.all_to_all(packed, axes, 0, 0)
-            recv_vals = jax.lax.bitcast_convert_type(
-                recv_p, jnp.bfloat16).reshape(D, S)
-        else:
-            recv_vals = jax.lax.all_to_all(out_vals, axes, 0, 0)  # [D, S]
-        if dense_frontier:
-            # validity is static (= out_valid of the sender); the receive
-            # side's static in_valid already encodes it
-            rf = jnp.ones((D * S + 1,), jnp.bool_).at[-1].set(False)
-        else:
-            recv_flag = jax.lax.all_to_all(flag, axes, 0, 0)
-            rf = jnp.concatenate([recv_flag.reshape(-1),
-                                  jnp.zeros((1,), jnp.bool_)])
-        rv = jnp.concatenate([recv_vals.reshape(-1),
-                              jnp.full((1,), ident, wdt)])
-
-        # ---- gather over the pre-written dc_bin ----
-        ev = rv[A["in_msg_slot"]].astype(mono.dtype)          # [NEd]
-        evalid = rf[A["in_msg_slot"]] & A["in_valid"]
-        if program.apply_weight is not None and weighted:
-            ev = program.apply_weight(ev, A["in_w"])
-        ev = jnp.where(evalid, ev, mono.identity)
-        dst = jnp.where(evalid, A["in_dst_local"], nv)
-        acc = mono.segment_fold(ev, dst, nv + 1)[:nv]
-        touched = (jax.ops.segment_max(evalid.astype(jnp.int32), dst,
-                                       num_segments=nv + 1)[:nv]) > 0
-
-        st3, activated = program.apply_fn(state, acc, touched, it)
-        state = _tree_where(touched, st3, state)
-        new_active = keep | (activated & touched)
-        if program.filter_fn is not None:
-            st4, fkeep = program.filter_fn(state, it)
-            state = _tree_where(new_active, st4, state)
-            new_active = new_active & fkeep
-        return state, new_active
-
-    return step
-
-
-def build_sc_step(program: VertexProgram, meta: dict,
-                  axis_names: Sequence[str], ragged: bool = False):
-    """Source-centric distributed iteration: per-destination compaction +
-    ragged exchange.
-
-    ``ragged=True`` uses ``lax.ragged_all_to_all`` (TPU backends — wire bytes
-    truly proportional to the active edges).  ``ragged=False`` is the portable
-    emulation: compacted per-pair capacity buffers over a dense ``all_to_all``
-    with explicit counts (identical semantics; XLA:CPU has no ragged thunk).
-    The Eq. 1 cost model prices the SC wire bytes as ragged either way, which
-    is exact for the TPU target.
-    """
-    mono = program.monoid
-    nv, D = meta["nv"], meta["D"]
-    cap_in = meta["cap_in"]
-    cap_pair = meta["cap_pair"]
-    weighted = meta["weighted"]
-    axes = tuple(axis_names)
-
-    def step(state, active, arrays, it):
-        A = _squeeze0(arrays)
-        msgs = program.scatter_fn(state).astype(mono.dtype)
-        ident = mono.identity
-        ne_s = A["oe_src_local"].shape[0]
-
-        if program.init_fn is not None:
-            st2, keep = program.init_fn(state, it)
-            state = _tree_where(active, st2, state)
-            keep = keep & active
-        else:
-            keep = jnp.zeros((nv,), jnp.bool_)
-
-        # ---- compact active out-edges per destination-device group ----
-        act_e = A["oe_valid"] & active[A["oe_src_local"]]      # [NEs]
-        vals_e = msgs[A["oe_src_local"]]
-        if program.apply_weight is not None and weighted:
-            vals_e = program.apply_weight(vals_e, A["oe_w"])
-        goff = A["oe_group_off"].astype(jnp.int32)             # [D+1]
-        c = jnp.cumsum(act_e.astype(jnp.int32))
-        co = jnp.concatenate([jnp.zeros((1,), jnp.int32), c])
-        tot_at = co[goff]                                      # [D+1]
-        send_sizes = jnp.diff(tot_at)                          # [D]
-        grp = jnp.searchsorted(goff[1:], jnp.arange(ne_s, dtype=jnp.int32),
-                               side="right").astype(jnp.int32)
-        grp_c = jnp.minimum(grp, D - 1)
-        rank = (c - 1) - tot_at[grp_c]                         # rank in group
-
-        if ragged:
-            send_off = jnp.concatenate(
-                [jnp.zeros((1,), jnp.int32),
-                 jnp.cumsum(send_sizes)[:-1].astype(jnp.int32)])
-            pos = jnp.where(act_e, send_off[grp_c] + rank, ne_s)
-            buf_vals = jnp.full((ne_s + 1,), ident, mono.dtype) \
-                .at[pos].set(jnp.where(act_e, vals_e, ident))[:ne_s]
-            buf_ids = jnp.full((ne_s + 1,), nv, jnp.int32) \
-                .at[pos].set(jnp.where(act_e, A["oe_dst_local"], nv))[:ne_s]
-            recv_sizes = jax.lax.all_to_all(
-                send_sizes.reshape(D, 1), axes, 0, 0).reshape(D)
-            recv_off = jnp.concatenate(
-                [jnp.zeros((1,), jnp.int32),
-                 jnp.cumsum(recv_sizes)[:-1].astype(jnp.int32)])
-            out_offsets = jax.lax.all_to_all(
-                recv_off.reshape(D, 1), axes, 0, 0).reshape(D)
-            rvals = jax.lax.ragged_all_to_all(
-                buf_vals, jnp.full((cap_in,), ident, mono.dtype),
-                send_off, send_sizes, out_offsets, recv_sizes,
-                axis_name=axes)
-            rids = jax.lax.ragged_all_to_all(
-                buf_ids, jnp.full((cap_in,), nv, jnp.int32),
-                send_off, send_sizes, out_offsets, recv_sizes,
-                axis_name=axes)
-            total = jnp.sum(recv_sizes)
-            valid = jnp.arange(cap_in, dtype=jnp.int32) < total
-        else:
-            # portable emulation: per-pair rows of capacity cap_pair
-            flat = jnp.where(act_e, grp_c * cap_pair + rank, D * cap_pair)
-            buf_vals = jnp.full((D * cap_pair + 1,), ident, mono.dtype) \
-                .at[flat].set(jnp.where(act_e, vals_e, ident))[:-1] \
-                .reshape(D, cap_pair)
-            buf_ids = jnp.full((D * cap_pair + 1,), nv, jnp.int32) \
-                .at[flat].set(jnp.where(act_e, A["oe_dst_local"], nv))[:-1] \
-                .reshape(D, cap_pair)
-            recv_sizes = jax.lax.all_to_all(
-                send_sizes.reshape(D, 1), axes, 0, 0).reshape(D)
-            rvals = jax.lax.all_to_all(buf_vals, axes, 0, 0).reshape(-1)
-            rids = jax.lax.all_to_all(buf_ids, axes, 0, 0).reshape(-1)
-            col = jnp.tile(jnp.arange(cap_pair, dtype=jnp.int32), (D, 1))
-            valid = (col < recv_sizes[:, None]).reshape(-1)
-
-        ids = jnp.where(valid, rids, nv)
-        vals = jnp.where(valid, rvals, ident)
-        acc = mono.segment_fold(vals, ids, nv + 1)[:nv]
-        touched = (jax.ops.segment_max(valid.astype(jnp.int32), ids,
-                                       num_segments=nv + 1)[:nv]) > 0
-
-        st3, activated = program.apply_fn(state, acc, touched, it)
-        state = _tree_where(touched, st3, state)
-        new_active = keep | (activated & touched)
-        if program.filter_fn is not None:
-            st4, fkeep = program.filter_fn(state, it)
-            state = _tree_where(new_active, st4, state)
-            new_active = new_active & fkeep
-        return state, new_active
-
-    return step
-
-
-def build_hybrid_step(program: VertexProgram, meta: dict,
-                      axis_names: Sequence[str]):
-    """Per-partition dual-mode iteration — the paper's exact granularity
-    (Eq. 1 decided per partition, not per iteration).
-
-    ``dc_mask`` (one bool per local partition) selects, per partition,
-    whether its vertices scatter through the dense DC bins or the compacted
-    SC exchange; both streams fold into the same accumulator, exactly like
-    the single-device engine."""
-    mono = program.monoid
-    nv, S, D = meta["nv"], meta["S"], meta["D"]
-    cap_pair = meta["cap_pair"]
-    kpd = meta["kpd"]
-    q = nv // kpd
-    weighted = meta["weighted"]
-    axes = tuple(axis_names)
-
-    def step(state, active, arrays, it, dc_mask):
-        A = _squeeze0(arrays)
-        dcm = dc_mask[0] if dc_mask.ndim == 2 else dc_mask     # [kpd]
-        msgs = program.scatter_fn(state).astype(mono.dtype)
-        ident = mono.identity
-
-        if program.init_fn is not None:
-            st2, keep = program.init_fn(state, it)
-            state = _tree_where(active, st2, state)
-            keep = keep & active
-        else:
-            keep = jnp.zeros((nv,), jnp.bool_)
-
-        # ---- DC stream: only partitions in DC mode ----
-        srcl = A["out_src_local"]                              # [D, S]
-        src_part = srcl // q
-        flag = A["out_valid"] & active[srcl] & dcm[src_part]
-        out_vals = jnp.where(flag, msgs[srcl], ident)
-        recv_vals = jax.lax.all_to_all(out_vals, axes, 0, 0)
-        recv_flag = jax.lax.all_to_all(flag, axes, 0, 0)
-        rv = jnp.concatenate([recv_vals.reshape(-1),
-                              mono.identity_array((1,))])
-        rf = jnp.concatenate([recv_flag.reshape(-1),
-                              jnp.zeros((1,), jnp.bool_)])
-        ev = rv[A["in_msg_slot"]]
-        evalid = rf[A["in_msg_slot"]] & A["in_valid"]
-        if program.apply_weight is not None and weighted:
-            ev = program.apply_weight(ev, A["in_w"])
-        ev = jnp.where(evalid, ev, ident)
-        dst = jnp.where(evalid, A["in_dst_local"], nv)
-        acc = mono.segment_fold(ev, dst, nv + 1)
-        touched = jax.ops.segment_max(evalid.astype(jnp.int32), dst,
-                                      num_segments=nv + 1)
-
-        # ---- SC stream: active vertices of non-DC partitions ----
-        vpart = jnp.arange(nv, dtype=jnp.int32) // q
-        sc_active = active & ~dcm[vpart]
-        ne_s = A["oe_src_local"].shape[0]
-        act_e = A["oe_valid"] & sc_active[A["oe_src_local"]]
-        vals_e = msgs[A["oe_src_local"]]
-        if program.apply_weight is not None and weighted:
-            vals_e = program.apply_weight(vals_e, A["oe_w"])
-        goff = A["oe_group_off"].astype(jnp.int32)
-        c = jnp.cumsum(act_e.astype(jnp.int32))
-        co = jnp.concatenate([jnp.zeros((1,), jnp.int32), c])
-        tot_at = co[goff]
-        send_sizes = jnp.diff(tot_at)
-        grp = jnp.searchsorted(goff[1:], jnp.arange(ne_s, dtype=jnp.int32),
-                               side="right").astype(jnp.int32)
-        grp_c = jnp.minimum(grp, D - 1)
-        rank = (c - 1) - tot_at[grp_c]
-        flat = jnp.where(act_e, grp_c * cap_pair + rank, D * cap_pair)
-        buf_vals = jnp.full((D * cap_pair + 1,), ident, mono.dtype) \
-            .at[flat].set(jnp.where(act_e, vals_e, ident))[:-1] \
-            .reshape(D, cap_pair)
-        buf_ids = jnp.full((D * cap_pair + 1,), nv, jnp.int32) \
-            .at[flat].set(jnp.where(act_e, A["oe_dst_local"], nv))[:-1] \
-            .reshape(D, cap_pair)
-        recv_sizes = jax.lax.all_to_all(
-            send_sizes.reshape(D, 1), axes, 0, 0).reshape(D)
-        rvals = jax.lax.all_to_all(buf_vals, axes, 0, 0).reshape(-1)
-        rids = jax.lax.all_to_all(buf_ids, axes, 0, 0).reshape(-1)
-        col = jnp.tile(jnp.arange(cap_pair, dtype=jnp.int32), (D, 1))
-        valid = (col < recv_sizes[:, None]).reshape(-1)
-        ids = jnp.where(valid, rids, nv)
-        vals = jnp.where(valid, rvals, ident)
-        acc2 = mono.segment_fold(vals, ids, nv + 1)
-        touched2 = jax.ops.segment_max(valid.astype(jnp.int32), ids,
-                                       num_segments=nv + 1)
-
-        acc = mono.combine(acc, acc2)[:nv]
-        # segment_max yields INT_MIN on empty segments: compare BEFORE or-ing
-        touched = ((touched > 0) | (touched2 > 0))[:nv]
-
-        st3, activated = program.apply_fn(state, acc, touched, it)
-        state = _tree_where(touched, st3, state)
-        new_active = keep | (activated & touched)
-        if program.filter_fn is not None:
-            st4, fkeep = program.filter_fn(state, it)
-            state = _tree_where(new_active, st4, state)
-            new_active = new_active & fkeep
-        return state, new_active
-
-    return step
-
-
-class DistEngine:
-    """Multi-device PPM engine over an arbitrary mesh.
-
-    The graph's device dimension is sharded over *all* mesh axes (the PPM
-    bin exchange treats the pod mesh as one flat all_to_all group; the pod
-    axis simply contributes the slowest-varying device blocks).
-    """
-
-    def __init__(self, sharded, program: VertexProgram, mesh,
-                 mode: str = "hybrid", bw_ratio: float = 2.0):
-        self.sl = sharded
-        self.program = program
-        self.mesh = mesh
-        self.mode = mode
-        self.bw_ratio = bw_ratio
-        self.axes = tuple(mesh.axis_names)
-        meta = dict(nv=sharded.nv, S=sharded.S, D=sharded.D,
-                    cap_in=sharded.cap_in, cap_pair=sharded.cap_pair,
-                    kpd=sharded.kpd, weighted=sharded.weighted)
-        self.meta = meta
-        spec_arr = P(self.axes)
-        shard = NamedSharding(mesh, spec_arr)
-        self.arrays = jax.tree_util.tree_map(
-            lambda a: jax.device_put(jnp.asarray(a), shard),
-            self.sl.arrays())
-        deg = np.zeros(sharded.D * sharded.nv, np.int32)
-        deg[:len(sharded.deg)] = sharded.deg
-        self.deg = jax.device_put(jnp.asarray(deg), shard)
-
-        dc_body = build_dc_step(program, meta, self.axes)
-        sc_body = build_sc_step(program, meta, self.axes)
-        hy_body = build_hybrid_step(program, meta, self.axes)
-
-        def wrap(body):
-            def fn(state, active, arrays, it):
-                return jax.shard_map(
-                    body, mesh=mesh,
-                    in_specs=(P(self.axes), P(self.axes), P(self.axes), P()),
-                    out_specs=(P(self.axes), P(self.axes)),
-                )(state, active, arrays, it)
-            return jax.jit(fn)
-        self._dc = wrap(dc_body)
-        self._sc = wrap(sc_body)
-
-        def hy_fn(state, active, arrays, it, dc_mask):
-            return jax.shard_map(
-                hy_body, mesh=mesh,
-                in_specs=(P(self.axes), P(self.axes), P(self.axes), P(),
-                          P(self.axes)),
-                out_specs=(P(self.axes), P(self.axes)),
-            )(state, active, arrays, it, dc_mask)
-        self._hy = jax.jit(hy_fn)
-
-        # per-(global)-partition stats for the Eq. 1 per-partition decision
-        k_glob = sharded.D * sharded.kpd
-        q = sharded.nv // sharded.kpd
-        vpart = jnp.asarray(
-            (np.arange(sharded.D * sharded.nv) // q).astype(np.int32))
-
-        @jax.jit
-        def _part_stats(active):
-            a32 = active.astype(jnp.int32)
-            counts = jax.ops.segment_sum(a32, vpart, num_segments=k_glob)
-            ea = jax.ops.segment_sum(a32 * self.deg, vpart,
-                                     num_segments=k_glob)
-            return counts, ea
-        self._pstats = _part_stats
-        from .cost import CostModel
-        dc_cost = (sharded.part_msgs * 4 + k_glob * 4
-                   + 2 * sharded.part_msgs * 4 + sharded.part_edges * 4)
-        kk = len(sharded.part_edges)
-        # pad per-partition constants to the padded global partition count
-        dcc = np.zeros(k_glob); dcc[:kk] = dc_cost
-        r = sharded.part_msgs / np.maximum(sharded.part_edges, 1)
-        scc = np.zeros(k_glob); scc[:kk] = 2 * r * 4 + 3 * 4
-        self._cost_pp = CostModel(dc_cost=dcc, sc_coeff=scc,
-                                  bw_ratio=bw_ratio)
-
-        @jax.jit
-        def _stats(active):
-            return (jnp.sum(active.astype(jnp.int64)),
-                    jnp.sum(active.astype(jnp.int64) * self.deg))
-        self._stats = _stats
-
-        # aggregated Eq. 1 threshold: average DC cost per (all) edge vs the
-        # per-active-edge SC cost
-        L_edges = float(sharded.part_edges.sum())
-        self._dc_total = float(
-            (sharded.part_msgs.sum() * 4 + sharded.part_edges.sum() * 4
-             + 2 * sharded.part_msgs.sum() * 4))
-        r = float(sharded.part_msgs.sum()) / max(L_edges, 1.0)
-        self._sc_per_edge = 2 * r * 4 + 3 * 4
-
-    def _choose_dc(self, e_active: int) -> bool:
-        if self.mode == "dc":
-            return True
-        if self.mode == "sc":
-            return False
-        return self._dc_total <= self.bw_ratio * e_active * self._sc_per_edge
-
-    def run(self, state, frontier, max_iters: int = 10_000,
-            until_empty: bool = True):
-        shard = NamedSharding(self.mesh, P(self.axes))
-        state = jax.tree_util.tree_map(
-            lambda a: jax.device_put(jnp.asarray(a), shard), state)
-        active = jax.device_put(jnp.asarray(frontier, jnp.bool_), shard)
-        stats = []
-        for it in range(max_iters):
-            n_act, e_act = self._stats(active)
-            n_act, e_act = int(n_act), int(e_act)
-            if until_empty and n_act == 0:
-                break
-            t0 = time.perf_counter()
-            if self.mode == "hybrid_pp":
-                counts, ea = self._pstats(active)
-                counts = np.asarray(counts)
-                ea = np.asarray(ea)
-                dc_mask = self._cost_pp.choose_dc(ea, counts > 0)
-                state, active = self._hy(
-                    state, active, self.arrays, jnp.int32(it),
-                    jax.device_put(
-                        jnp.asarray(dc_mask),
-                        NamedSharding(self.mesh, P(self.axes))))
-                jax.block_until_ready(active)
-                stats.append(dict(it=it, n_active=n_act, e_active=e_act,
-                                  mode="hybrid_pp",
-                                  dc_parts=int(dc_mask.sum()),
-                                  sc_parts=int(((~dc_mask)
-                                                & (counts > 0)).sum()),
-                                  wall_s=time.perf_counter() - t0))
-                continue
-            use_dc = self._choose_dc(e_act)
-            fn = self._dc if use_dc else self._sc
-            state, active = fn(state, active, self.arrays, jnp.int32(it))
-            jax.block_until_ready(active)
-            stats.append(dict(it=it, n_active=n_act, e_active=e_act,
-                              mode="dc" if use_dc else "sc",
-                              wall_s=time.perf_counter() - t0))
-        return state, active, stats
+__all__ = ["DistEngine", "build_dc_step", "build_sc_step",
+           "build_hybrid_step"]

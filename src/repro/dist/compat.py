@@ -1,0 +1,162 @@
+"""JAX version shim: one sharding API surface across 0.4.x-0.5.x.
+
+The repo targets the modern spelling (``jax.sharding.AxisType``,
+``AbstractMesh(axis_sizes, axis_names)``, ``jax.make_mesh(...,
+axis_types=...)``, ``jax.shard_map``).  On the pinned 0.4.37 none of those
+exist in that form, so this module provides equivalents and — on import —
+installs them into ``jax`` / ``jax.sharding`` so that code written against
+the new API (including the test suite) imports and runs unchanged.
+
+Import this module (or anything under ``repro.dist``) before touching
+``jax.sharding.AxisType`` etc.; ``tests/conftest.py`` does so for the test
+suite, and launcher entrypoints go through :func:`make_mesh` directly.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+import jax.sharding as _jsharding
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["AxisType", "AbstractMesh", "Mesh", "NamedSharding",
+           "PartitionSpec", "make_mesh", "shard_map", "cost_analysis",
+           "install"]
+
+
+def cost_analysis(compiled):
+    """``compiled.cost_analysis()`` as one flat dict on every version
+    (0.4.x returns a list with one per-device dict, 0.5.x+ a dict)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+# ----------------------------------------------------------------------
+# AxisType (jax >= 0.5.x)
+# ----------------------------------------------------------------------
+
+try:
+    from jax.sharding import AxisType          # noqa: F401  (0.5.x+)
+except ImportError:
+    class AxisType(enum.Enum):
+        """Stand-in for ``jax.sharding.AxisType``.
+
+        0.4.x meshes behave like all-``Auto`` axes, so mesh constructors
+        below simply drop the argument there; the enum exists so callers
+        can spell ``axis_types=(AxisType.Auto,) * n`` portably.
+        """
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+# ----------------------------------------------------------------------
+# make_mesh with axis_types on every version
+# ----------------------------------------------------------------------
+
+_ORIG_MAKE_MESH = getattr(jax.make_mesh, "__wrapped_orig__", jax.make_mesh)
+_MAKE_MESH_PARAMS = inspect.signature(_ORIG_MAKE_MESH).parameters
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` accepting ``axis_types`` on any JAX version."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and "axis_types" in _MAKE_MESH_PARAMS:
+        kwargs["axis_types"] = axis_types
+    return _ORIG_MAKE_MESH(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+make_mesh.__wrapped_orig__ = _ORIG_MAKE_MESH
+
+
+# ----------------------------------------------------------------------
+# AbstractMesh: new-style (axis_sizes, axis_names) constructor everywhere
+# ----------------------------------------------------------------------
+
+_RealAbstractMesh = getattr(_jsharding.AbstractMesh, "__wrapped_orig__",
+                            _jsharding.AbstractMesh)
+_ABS_OLD_STYLE = "shape_tuple" in inspect.signature(
+    _RealAbstractMesh.__init__).parameters
+
+
+def AbstractMesh(axis_shapes, axis_names=None, *, axis_types=None):
+    """Device-free mesh geometry, new-style signature on any version.
+
+    Accepts either ``AbstractMesh((2, 2), ("data", "model"))`` (0.5.x
+    spelling) or the legacy ``AbstractMesh((("data", 2), ("model", 2)))``.
+    ``axis_types`` is forwarded where supported and dropped on 0.4.x
+    (whose meshes are implicitly all-Auto).
+    """
+    if axis_names is None:                     # legacy pair-tuple call
+        pairs = tuple(axis_shapes)
+        sizes = tuple(s for _, s in pairs)
+        names = tuple(n for n, _ in pairs)
+    else:
+        sizes = tuple(axis_shapes)
+        names = tuple(axis_names)
+        pairs = tuple(zip(names, sizes))
+    if _ABS_OLD_STYLE:
+        return _RealAbstractMesh(pairs)
+    if axis_types is not None:
+        return _RealAbstractMesh(sizes, names, axis_types=axis_types)
+    return _RealAbstractMesh(sizes, names)
+
+
+AbstractMesh.__wrapped_orig__ = _RealAbstractMesh
+
+
+# ----------------------------------------------------------------------
+# shard_map: jax.shard_map signature (check_vma) on every version
+# ----------------------------------------------------------------------
+
+if hasattr(jax, "shard_map") and not hasattr(jax.shard_map,
+                                             "__wrapped_orig__"):
+    _ORIG_SHARD_MAP = jax.shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs, **kwargs):
+        return _ORIG_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, **kwargs)
+else:
+    from jax.experimental.shard_map import shard_map as _experimental_smap
+
+    def shard_map(f, mesh, in_specs, out_specs, *, check_vma=None,
+                  check_rep=None, auto=None):
+        # 0.4.x spells the validity check ``check_rep``; its checker
+        # predates several collectives used here (all_to_all bodies), so
+        # default it OFF unless explicitly requested — it is a
+        # validation/optimization flag, never a semantics change.
+        # Other kwargs are NOT silently dropped: a semantics-affecting
+        # option the old API cannot honor must fail loudly.
+        rep = check_rep if check_rep is not None else bool(check_vma)
+        kwargs = {} if auto is None else {"auto": auto}
+        return _experimental_smap(f, mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs, check_rep=rep,
+                                  **kwargs)
+
+shard_map.__wrapped_orig__ = getattr(jax, "shard_map", None)
+
+
+# ----------------------------------------------------------------------
+# install: make the modern spellings importable from jax itself
+# ----------------------------------------------------------------------
+
+def install():
+    """Idempotently patch ``jax`` / ``jax.sharding`` with the shims so code
+    written against the 0.5.x API (``from jax.sharding import AxisType``,
+    ``jax.make_mesh(..., axis_types=...)``) runs on the pinned 0.4.37."""
+    if not hasattr(_jsharding, "AxisType"):
+        _jsharding.AxisType = AxisType
+    if _ABS_OLD_STYLE and _jsharding.AbstractMesh is not AbstractMesh:
+        _jsharding.AbstractMesh = AbstractMesh
+    if "axis_types" not in _MAKE_MESH_PARAMS and jax.make_mesh is not make_mesh:
+        jax.make_mesh = make_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+
+
+install()

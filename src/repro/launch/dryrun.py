@@ -84,7 +84,8 @@ def run_lm_cell(arch: str, shape: str, multi_pod: bool,
 
 
 def summarize(compiled, meta, mesh, chips, t_lower, t_compile) -> dict:
-    cost = compiled.cost_analysis() or {}
+    from ..dist.compat import cost_analysis
+    cost = cost_analysis(compiled)
     try:
         mem = compiled.memory_analysis()
         mem_d = dict(
@@ -141,10 +142,11 @@ def run_graph_cell(app: str, mode: str, multi_pod: bool,
                    scale: int = 30, edge_factor: int = 16,
                    variant: str = "") -> dict:
     """PPM engine dry-run: one iteration step on a synthetic rmat<scale>."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
     from ..apps.bfs import bfs_program
     from ..apps.pagerank import pagerank_program
-    from ..core.dist_engine import build_dc_step, build_sc_step
+    from ..dist.compat import (NamedSharding, PartitionSpec as P,
+                               shard_map)
+    from ..dist.engine import build_dc_step, build_sc_step
     from ..graph.shard import sharded_spec
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -166,7 +168,7 @@ def run_graph_cell(app: str, mode: str, multi_pod: bool,
     dense = "dense" in variant
     bf16 = "bf16" in variant
     if mode == "hybrid":
-        from ..core.dist_engine import build_hybrid_step
+        from ..dist.engine import build_hybrid_step
         body = build_hybrid_step(prog, gmeta, axes)
     elif mode == "dc":
         body = build_dc_step(prog, gmeta, axes, dense_frontier=dense,
@@ -176,14 +178,14 @@ def run_graph_cell(app: str, mode: str, multi_pod: bool,
 
     if mode == "hybrid":
         def step(state, active, arrays, it, dc_mask):
-            return jax.shard_map(
+            return shard_map(
                 body, mesh=mesh,
                 in_specs=(P(axes), P(axes), P(axes), P(), P(axes)),
                 out_specs=(P(axes), P(axes)))(state, active, arrays, it,
                                               dc_mask)
     else:
         def step(state, active, arrays, it):
-            return jax.shard_map(
+            return shard_map(
                 body, mesh=mesh,
                 in_specs=(P(axes), P(axes), P(axes), P()),
                 out_specs=(P(axes), P(axes)))(state, active, arrays, it)

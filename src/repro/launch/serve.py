@@ -13,9 +13,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, get_smoke_config
+from ..dist.sharding import param_shardings, set_activation_mesh
 from ..models.transformer import init_lm
 from ..serve import Request, Server
 from ..train import checkpoint
+from .mesh import make_local_mesh
 
 
 def main():
@@ -32,11 +34,17 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not cfg.decoder:
         raise SystemExit(f"{args.arch} is encoder-only; no decode serving")
-    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    params, axes = init_lm(cfg, jax.random.PRNGKey(0))
     dtype = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
     if args.ckpt:
         params, _, st = checkpoint.restore(args.ckpt, params, {})
         print(f"[serve] loaded checkpoint step {st}")
+    # place params via the sharding-rules layer (FSDP/TP degenerate to
+    # replicated on the 1-device smoke mesh) and activate constraints
+    mesh = make_local_mesh()
+    set_activation_mesh(mesh)
+    params = jax.tree_util.tree_map(
+        jax.device_put, params, param_shardings(axes, params, mesh))
     srv = Server(params, cfg, n_slots=args.slots, max_len=args.max_len,
                  dtype=dtype)
     rng = np.random.default_rng(0)

@@ -16,17 +16,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs import SHAPES, get_config
-from ..dist.sharding import (batch_spec, default_rules, param_shardings,
+from ..dist.sharding import (_collapse, _data_axes, batch_spec,
+                             default_rules, param_shardings,
                              set_activation_mesh)
 from ..models.config import ModelConfig
 from ..models.transformer import init_lm, lm_loss
 from ..serve.engine import decode_step, init_cache, prefill
 from ..train.optimizer import OptConfig, init_opt_state
 from ..train.train_step import make_train_step
-
-
-def _data_axes(mesh: Mesh):
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
 def _data_extent(mesh: Mesh) -> int:
@@ -72,8 +69,7 @@ def cache_shardings(cfg: ModelConfig, cache_shapes, mesh: Mesh):
     """Shardings for the KV/state cache: batch over data axes when the batch
     divides, otherwise shard the sequence (cache width) over data — the
     sequence-parallel path for batch-1 long-context decode."""
-    da = _data_axes(mesh)
-    da = da if len(da) > 1 else (da[0] if da else None)
+    da = _collapse(_data_axes(mesh))
 
     def for_leaf(path_key, s):
         shape = s.shape

@@ -199,15 +199,13 @@ def moe_fwd_ppm_ep_sharded(p, cfg, x, *, dtype=jnp.bfloat16):
     the (auto-sharded) model; drops into manual collectives over the model
     axis.  Falls back to dense_dp when no mesh is active (tests) or the
     expert count does not divide the model axis (mixtral on 16-way TP)."""
-    from ..dist.sharding import _ACT_MESH
+    from ..dist.sharding import _ACT_MESH, _collapse, _data_axes
     mesh = _ACT_MESH[0]
     if mesh is None or "model" not in mesh.axis_names \
             or cfg.moe_experts % mesh.shape["model"] != 0:
         return moe_fwd_dense(p, cfg, x, dtype=dtype)
-    from jax.sharding import PartitionSpec as P
-    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-    db = data_axes if len(data_axes) > 1 else (
-        data_axes[0] if data_axes else None)
+    from ..dist.compat import PartitionSpec as P, shard_map
+    db = _collapse(_data_axes(mesh))
 
     def spec_of(path_leaf):
         name = path_leaf[0].key if hasattr(path_leaf[0], "key") else ""
@@ -227,7 +225,7 @@ def moe_fwd_ppm_ep_sharded(p, cfg, x, *, dtype=jnp.bfloat16):
     # tokens are sequence-split over the model axis: each shard dispatches
     # ONLY its S/Dm token slice (x replicated over model would make every
     # shard bin the same tokens - a 16x compute redundancy, observed)
-    return jax.shard_map(
+    return shard_map(
         lambda pp, xx: fn(pp, x=xx),
         mesh=mesh,
         in_specs=(p_specs, P(db, "model", None)),

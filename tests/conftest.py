@@ -1,12 +1,19 @@
 import os
 
+# src/ reaches sys.path via pyproject [tool.pytest.ini_options] pythonpath
+# (inserted before this conftest is imported; pytest>=7 is pinned).
+
 # Tests run on the single host device.  The 512-device environment is ONLY
 # for launch/dryrun.py (set there before any jax import); distributed tests
 # spawn subprocesses with their own XLA_FLAGS.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import numpy as np
-import pytest
+# Install the JAX version shims (jax.sharding.AxisType, new-style
+# AbstractMesh, make_mesh(axis_types=...)) before test modules import them.
+import repro.dist.compat  # noqa: E402,F401
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 
 @pytest.fixture(scope="session")

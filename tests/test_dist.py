@@ -24,13 +24,13 @@ def _run(code: str):
 
 COMMON = """
 import jax, numpy as np, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.dist.compat import AxisType, make_mesh
 from repro.graph import rmat, build_layout, to_scipy
 from repro.graph.shard import shard_layout
 from repro.core.dist_engine import DistEngine
 import scipy.sparse.csgraph as csg
 D = 8
-mesh = jax.make_mesh((D,), ("dev",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((D,), ("dev",), axis_types=(AxisType.Auto,))
 g = rmat(10, 8, seed=1)
 L = build_layout(g, k=16, edge_tile=64, msg_tile=32)
 SL = shard_layout(L, D)
@@ -154,15 +154,15 @@ def test_dist_equivalence_random_graphs():
     on random graphs (one subprocess, several seeds)."""
     out = _run("""
 import numpy as np, jax
-from jax.sharding import AxisType
+from repro.dist.compat import AxisType, make_mesh
 from repro.graph import uniform_random, build_layout
 from repro.graph.shard import shard_layout
-from repro.core.dist_engine import DistEngine
+from repro.dist.engine import DistEngine
 from repro.apps.bfs import bfs_program
 from repro.apps import bfs as bfs_single
 
 D = 8
-mesh = jax.make_mesh((D,), ("dev",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((D,), ("dev",), axis_types=(AxisType.Auto,))
 for seed in (3, 17, 91):
     g = uniform_random(300, 2500, seed=seed)
     L = build_layout(g, k=16, edge_tile=32, msg_tile=16)

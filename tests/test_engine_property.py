@@ -7,6 +7,8 @@ correctness contract "same result as sequential, without locks/atomics".
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.apps import bfs, connected_components, sssp

@@ -1,6 +1,8 @@
 """Layout construction invariants + hypothesis round-trip properties."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.graph import (build_layout, from_edges, grid2d, ring, rmat, star,

@@ -1,0 +1,71 @@
+"""Properties of the repro.dist.sharding rules layer beyond the specs in
+test_sharding.py: divisibility and consume-each-axis-once invariants over
+arbitrary mesh geometries (hypothesis; whole module skips without it —
+the device_put round trip lives in test_sharding.py so it always runs)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.dist.sharding import default_rules, spec_for
+
+hyp = pytest.importorskip("hypothesis")  # optional (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+LOGICAL = ["vocab", "embed", "heads", "kv", "ff", "ssm_inner", "ssm_heads",
+           "experts", "layers", None]
+
+MESHES = st.sampled_from([
+    ((2, 2), ("data", "model")),
+    ((4, 2), ("data", "model")),
+    ((2, 16), ("data", "model")),
+    ((2, 2, 2), ("pod", "data", "model")),
+    ((2, 4, 2), ("pod", "data", "model")),
+    ((8,), ("dev",)),
+    ((1, 1), ("data", "model")),
+])
+
+
+def _extent(mesh, entry):
+    flat = (entry,) if isinstance(entry, str) else tuple(entry)
+    return int(np.prod([mesh.shape[a] for a in flat])), flat
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.data())
+def test_spec_for_sharded_dims_always_divide(data):
+    """No spec entry ever shards a dim that does not divide its mesh-axis
+    extent, and no mesh axis is consumed twice in one spec."""
+    shape_axes, names = data.draw(MESHES)
+    mesh = jax.sharding.AbstractMesh(shape_axes, names)
+    axes = tuple(data.draw(st.sampled_from(LOGICAL))
+                 for _ in range(data.draw(st.integers(1, 4))))
+    shape = tuple(data.draw(st.integers(1, 96)) for _ in axes)
+    rules = default_rules(mesh)
+    spec = spec_for(axes, shape, mesh, rules)
+    assert len(spec) == len(shape)
+    seen = set()
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        extent, flat = _extent(mesh, entry)
+        assert dim % extent == 0, (axes, shape, spec)
+        assert not (seen & set(flat)), f"mesh axis consumed twice: {spec}"
+        seen.update(flat)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.data())
+def test_spec_for_respects_overrides(data):
+    """An override to None always replicates that logical axis."""
+    shape_axes, names = data.draw(MESHES)
+    mesh = jax.sharding.AbstractMesh(shape_axes, names)
+    victim = data.draw(st.sampled_from(
+        [a for a in LOGICAL if a is not None]))
+
+    class Cfg:
+        sharding_overrides = ((victim, None),)
+
+    rules = default_rules(mesh, Cfg())
+    assert rules[victim] is None
+    spec = spec_for((victim,), (64,), mesh, rules)
+    assert spec[0] is None
