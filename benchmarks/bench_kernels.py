@@ -1,0 +1,112 @@
+"""Kernel microbenchmark harness: per-backend timings for the PPM kernels.
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels [--smoke]
+      [--scales 8,10,12] [--backends ref,pallas-interpret]
+      [--out BENCH_kernels.json]
+
+Times one compiled call of each of ``gather`` (segment_combine), ``scatter``
+(dc_gather) and ``spmv`` (spmv_block) for every backend the registry can
+lower on this platform, across rmat graph scales, and writes the results to
+``BENCH_kernels.json`` at the repo root — the perf-trajectory artifact every
+hot-path PR regenerates.  ``--smoke`` (used by CI) runs one tiny scale with
+a single repetition so the emission path can never silently rot.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+from repro.backend import registry, tuning
+from repro.graph import build_layout, rmat
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+KERNELS = ("gather", "scatter", "spmv")
+
+
+def bench_backend(layout, backend_name: str, platform: str, reps: int):
+    """Per-kernel best-of-reps wall times; skips combos the backend cannot
+    lower (recording which backend actually ran is the registry's job)."""
+    rows = []
+    for kernel in KERNELS:
+        monoid = "add"
+        resolved = registry.resolve(kernel, monoid, platform=platform,
+                                    choice=backend_name)
+        if resolved.name != backend_name:
+            continue                 # would silently time the fallback
+        t = tuning.time_layout(layout, backend_name, platform,
+                               kernels=(kernel,), reps=reps,
+                               monoid=monoid)
+        rows.append({"kernel": kernel, "monoid": monoid,
+                     "backend": backend_name, "wall_s": t[kernel]})
+    return rows
+
+
+def run(scales, backends, reps: int, k: int, out_path: Path) -> dict:
+    platform = jax.default_backend()
+    results = []
+    for scale in scales:
+        g = rmat(scale, 8, seed=1)
+        layout = build_layout(g, k=min(k, max(1, g.n)))
+        for backend_name in backends:
+            rows = bench_backend(layout, backend_name, platform, reps)
+            for r in rows:
+                r.update(scale=scale, n=int(g.n), m=int(g.m),
+                         k=int(layout.k), q=int(layout.q),
+                         edge_tile=int(layout.edge_tile),
+                         msg_tile=int(layout.msg_tile))
+                results.append(r)
+            print(f"scale={scale} backend={backend_name}: "
+                  + (", ".join(f"{r['kernel']}={r['wall_s']*1e3:.3f}ms"
+                               for r in rows) or "no supported kernels"),
+                  file=sys.stderr)
+    doc = {
+        "meta": {
+            "platform": platform,
+            "jax": jax.__version__,
+            "reps": reps,
+            "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        },
+        "results": results,
+    }
+    out_path.write_text(json.dumps(doc, indent=2))
+    print(f"wrote {out_path} ({len(results)} rows)", file=sys.stderr)
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale, 1 rep (CI artifact-emission check)")
+    ap.add_argument("--scales", default=None,
+                    help="comma-separated rmat scales (default 8,10,12)")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated backend names (default: all "
+                         "resolvable on this platform)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_kernels.json"))
+    args = ap.parse_args()
+
+    if args.smoke:
+        scales = [6]
+        reps = 1
+    else:
+        scales = [int(s) for s in (args.scales or "8,10,12").split(",")]
+        reps = args.reps
+    if args.backends:
+        backends = args.backends.split(",")
+    else:
+        platform = jax.default_backend()
+        backends = [n for n in registry.available_backends()
+                    if registry.BACKENDS[n].supports(platform, "gather",
+                                                     "add", "float32")]
+    run(scales, backends, reps, args.k, Path(args.out))
+
+
+if __name__ == "__main__":
+    main()

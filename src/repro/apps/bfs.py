@@ -30,16 +30,17 @@ def bfs_program() -> VertexProgram:
 
 
 def bfs(layout, source: int, mode: str = "hybrid",
-        use_pallas: bool = False, bw_ratio: float = 2.0):
+        use_pallas: bool = None, bw_ratio: float = 2.0,
+        backend=None, engine: Engine = None):
     n_pad = layout.n_pad
-    program = bfs_program()
     parent = jnp.full((n_pad,), -1, jnp.int32).at[source].set(source)
     level = jnp.full((n_pad,), -1, jnp.int32).at[source].set(0)
     vid = jnp.arange(n_pad, dtype=jnp.uint32)
     frontier = np.zeros(n_pad, bool)
     frontier[source] = True
-    eng = Engine(layout, program, mode=mode, use_pallas=use_pallas,
-                 bw_ratio=bw_ratio)
+    eng = engine if engine is not None else Engine(
+        layout, bfs_program(), mode=mode, backend=backend,
+        use_pallas=use_pallas, bw_ratio=bw_ratio)
     state, _, stats = eng.run({"parent": parent, "level": level, "vid": vid},
                               frontier, max_iters=n_pad)
     return {"parent": np.asarray(state["parent"])[:layout.n],

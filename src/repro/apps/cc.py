@@ -28,12 +28,14 @@ def cc_program() -> VertexProgram:
 
 
 def connected_components(layout, mode: str = "hybrid",
-                         use_pallas: bool = False):
+                         use_pallas: bool = None,
+                         backend=None, engine: Engine = None):
     n_pad = layout.n_pad
-    program = cc_program()
     label = jnp.arange(n_pad, dtype=jnp.uint32)
     frontier = np.zeros(n_pad, bool)
     frontier[:layout.n] = True
-    eng = Engine(layout, program, mode=mode, use_pallas=use_pallas)
+    eng = engine if engine is not None else Engine(
+        layout, cc_program(), mode=mode, backend=backend,
+        use_pallas=use_pallas)
     state, _, stats = eng.run({"label": label}, frontier, max_iters=n_pad)
     return {"label": np.asarray(state["label"])[:layout.n], "stats": stats}

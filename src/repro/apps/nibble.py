@@ -39,15 +39,17 @@ def nibble_program(eps: float) -> VertexProgram:
 
 
 def nibble(layout, seeds, eps: float = 1e-4, max_iters: int = 100,
-           mode: str = "hybrid", use_pallas: bool = False):
+           mode: str = "hybrid", use_pallas: bool = None,
+           backend=None, engine: Engine = None):
     n_pad = layout.n_pad
     seeds = np.atleast_1d(np.asarray(seeds))
-    program = nibble_program(eps)
     pr = jnp.zeros((n_pad,), jnp.float32).at[seeds].set(1.0 / len(seeds))
     deg = jnp.asarray(layout.deg.astype(np.float32))
     frontier = np.zeros(n_pad, bool)
     frontier[seeds] = True
-    eng = Engine(layout, program, mode=mode, use_pallas=use_pallas)
+    eng = engine if engine is not None else Engine(
+        layout, nibble_program(eps), mode=mode, backend=backend,
+        use_pallas=use_pallas)
     state, _, stats = eng.run({"pr": pr, "deg": deg}, frontier,
                               max_iters=max_iters)
     return {"pr": np.asarray(state["pr"])[:layout.n], "stats": stats}

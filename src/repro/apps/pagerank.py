@@ -39,15 +39,17 @@ def pagerank_program(n: int, damping: float = 0.85) -> VertexProgram:
 
 def pagerank(layout, iters: int = 10, damping: float = 0.85,
              mode: str = "dc", fused: bool = True,
-             use_pallas: bool = False):
+             use_pallas: bool = None, backend=None,
+             engine: Engine = None):
     n_pad = layout.n_pad
-    program = pagerank_program(layout.n, damping)
     pr0 = jnp.full((n_pad,), 1.0 / layout.n, jnp.float32)
     deg = jnp.asarray(layout.deg.astype(np.float32))
     state0 = {"pr": pr0, "deg": deg}
     frontier = np.zeros(n_pad, bool)
     frontier[:layout.n] = True
-    eng = Engine(layout, program, mode=mode, use_pallas=use_pallas)
+    eng = engine if engine is not None else Engine(
+        layout, pagerank_program(layout.n, damping), mode=mode,
+        backend=backend, use_pallas=use_pallas)
     if fused:
         state, _ = eng.run_fused(state0, frontier, iters)
         stats = []

@@ -33,14 +33,16 @@ def sssp_program() -> VertexProgram:
 
 
 def sssp(layout, source: int, mode: str = "hybrid",
-         use_pallas: bool = False, max_iters: int = None):
+         use_pallas: bool = None, max_iters: int = None,
+         backend=None, engine: Engine = None):
     assert layout.weighted, "SSSP needs an edge-weighted graph"
     n_pad = layout.n_pad
-    program = sssp_program()
     dist = jnp.full((n_pad,), INF, jnp.float32).at[source].set(0.0)
     frontier = np.zeros(n_pad, bool)
     frontier[source] = True
-    eng = Engine(layout, program, mode=mode, use_pallas=use_pallas)
+    eng = engine if engine is not None else Engine(
+        layout, sssp_program(), mode=mode, backend=backend,
+        use_pallas=use_pallas)
     state, _, stats = eng.run({"dist": dist}, frontier,
                               max_iters=max_iters or n_pad)
     return {"dist": np.asarray(state["dist"])[:layout.n], "stats": stats}

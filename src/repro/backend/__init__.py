@@ -1,0 +1,46 @@
+"""Kernel-backend registry: one dispatch point for every PPM kernel call.
+
+The paper's §6 evaluation pins GPOP's win on matching the blocking geometry
+to the actual memory hierarchy: partitions sized so one partition's vertex
+data lives in the private (L2) cache, bins streamed sequentially through
+DRAM.  This package is the reproduction's analogue of that hardware match,
+as a *backend* choice instead of a compile-time constant:
+
+  ``ref``              pure ``jax.ops`` segment folds.  XLA:CPU fuses these
+                       into the cache-friendly loops the paper's handwritten
+                       OpenMP code realizes by construction — the right
+                       default on CPU hosts, and the semantic oracle
+                       everywhere (paper §6.1's "preprocessed once, verified
+                       against a reference" discipline).
+  ``pallas-interpret`` the Pallas kernel bodies executed by the interpreter.
+                       Bit-level identical control flow to the TPU kernels,
+                       ~100x slower than ``ref`` — a validation target, not a
+                       performance point (the paper's single-thread sanity
+                       runs play the same role).
+  ``pallas-native``    Mosaic-compiled kernels (``interpret=False``) on TPU.
+                       The paper's cache story transposed to VMEM: one
+                       partition's ``q`` vertices stay VMEM-resident across
+                       its bin column while edge tiles stream from HBM, so
+                       DRAM→HBM and LLC→VMEM take the roles §6.2 measures.
+
+Backends register per ``(platform, kernel, monoid, dtype)`` support;
+:func:`repro.backend.registry.resolve` picks one from
+``jax.default_backend()``, honours the ``REPRO_KERNEL_BACKEND`` override,
+and falls back to ``ref`` per call when a lowering is unsupported.  Tile
+geometry (``edge_tile``/``msg_tile`` — the §3.1 partition-sizing rule) is
+swept empirically by :mod:`repro.backend.tuning` and cached on disk.
+"""
+from __future__ import annotations
+
+from .registry import (BACKENDS, KernelBackend, available_backends,
+                       default_backend_name, make_kernels, resolve,
+                       supported)
+from .tuning import (DEFAULT_GEOMETRY, TileGeometry, autotune,
+                     resolve_geometry, tuned_layout)
+
+__all__ = [
+    "BACKENDS", "KernelBackend", "available_backends",
+    "default_backend_name", "make_kernels", "resolve", "supported",
+    "DEFAULT_GEOMETRY", "TileGeometry", "autotune", "resolve_geometry",
+    "tuned_layout",
+]

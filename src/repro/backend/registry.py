@@ -1,0 +1,234 @@
+"""Kernel-backend registry keyed on ``(platform, kernel, monoid, dtype)``.
+
+Every kernel call in the repo is constructed through :func:`make_kernels` /
+:func:`resolve`: the engine asks for a kernel by name (``gather`` /
+``scatter`` / ``spmv`` / ``fold``) together with its monoid and dtype, and
+the registry hands back the implementation that is actually lowerable on
+the current platform — ``ref`` (pure jnp), ``pallas-interpret`` (Pallas
+bodies under the interpreter, any host), or ``pallas-native`` (Mosaic,
+TPU only).  Selection order:
+
+  1. an explicit ``backend=`` argument (``Engine(..., backend=...)``),
+  2. the ``REPRO_KERNEL_BACKEND`` environment variable,
+  3. the platform default: ``pallas-native`` on TPU, ``ref`` elsewhere.
+
+If the selected backend cannot lower a particular ``(kernel, monoid,
+dtype)`` combination (e.g. a ``min_with_payload`` uint64 fold, or any
+``pallas-native`` call on a CPU host), that *call* falls back to ``ref``
+with a warning instead of failing — the rest of the engine keeps its
+chosen backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+KERNELS = ("gather", "scatter", "spmv", "fold")
+PALLAS_MONOIDS = ("add", "min", "max")
+
+
+def _monoid_obj(monoid):
+    """Accept a Monoid or a monoid name (resolved at the default dtype)."""
+    if isinstance(monoid, str):
+        from ..core.monoid import REGISTRY
+        return REGISTRY[monoid]()
+    return monoid
+
+
+def _fold_with_touched(mono):
+    def fold(vals, valid, ids, num_segments):
+        acc = mono.segment_fold(vals, ids, num_segments)
+        touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
+                                      num_segments=num_segments) > 0
+        return acc, touched
+    return fold
+
+
+@runtime_checkable
+class KernelBackend(Protocol):
+    """Factory for layout-bound kernels sharing the engine-facing API."""
+
+    name: str
+
+    def supports(self, platform: str, kernel: str, monoid: str,
+                 dtype) -> bool: ...
+
+    def gather(self, layout, monoid) -> Any: ...
+
+    def scatter(self, layout, monoid) -> Any: ...
+
+    def spmv(self, layout, weighted=None) -> Any: ...
+
+    def segment_fold(self, monoid) -> Any: ...
+
+
+class RefBackend:
+    """Pure-jnp backend: supports every monoid the Monoid type can fold."""
+
+    name = "ref"
+
+    def supports(self, platform, kernel, monoid, dtype):
+        if kernel == "spmv":
+            return monoid == "add" and jnp.issubdtype(jnp.dtype(dtype),
+                                                      jnp.floating)
+        return kernel in KERNELS
+
+    def gather(self, layout, monoid):
+        return kops.RefGather(layout, _monoid_obj(monoid))
+
+    def scatter(self, layout, monoid):
+        return kops.RefScatter(layout, _monoid_obj(monoid))
+
+    def spmv(self, layout, weighted=None):
+        return kops.RefSpmv(layout, weighted=weighted)
+
+    def segment_fold(self, monoid):
+        return _fold_with_touched(_monoid_obj(monoid))
+
+
+class PallasBackend:
+    """Pallas kernel bodies, interpreted (any host) or Mosaic (TPU)."""
+
+    def __init__(self, name: str, interpret: bool):
+        self.name = name
+        self.interpret = interpret
+
+    def supports(self, platform, kernel, monoid, dtype):
+        if not self.interpret and platform != "tpu":
+            return False                     # Mosaic lowering is TPU-only
+        if kernel == "fold":
+            return False                     # shard_map-side fold: ref only
+        dt = jnp.dtype(dtype)
+        if kernel == "spmv":
+            return monoid == "add" and dt == jnp.float32
+        if kernel not in ("gather", "scatter"):
+            return False
+        return monoid in PALLAS_MONOIDS and dt.kind in "fiu" \
+            and dt.itemsize == 4
+
+    def gather(self, layout, monoid):
+        mono = _monoid_obj(monoid)
+        return kops.GatherKernel(layout, mono.name, mono.dtype,
+                                 interpret=self.interpret)
+
+    def scatter(self, layout, monoid):
+        mono = _monoid_obj(monoid)
+        return kops.ScatterKernel(layout, mono.name, mono.dtype,
+                                  interpret=self.interpret)
+
+    def spmv(self, layout, weighted=None):
+        return kops.SpmvKernel(layout, interpret=self.interpret,
+                               weighted=weighted)
+
+    def segment_fold(self, monoid):
+        raise NotImplementedError(
+            f"{self.name} has no shard_map-compatible fold; resolve() "
+            "falls back to ref for kernel='fold'")
+
+
+BACKENDS: dict[str, KernelBackend] = {
+    "ref": RefBackend(),
+    "pallas-interpret": PallasBackend("pallas-interpret", interpret=True),
+    "pallas-native": PallasBackend("pallas-native", interpret=False),
+}
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(BACKENDS)
+
+
+def default_backend_name(platform: Optional[str] = None) -> str:
+    """Platform default, after the ``REPRO_KERNEL_BACKEND`` override."""
+    env = os.environ.get(ENV_VAR)
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(
+                f"{ENV_VAR}={env!r} is not a known backend; "
+                f"choose one of {available_backends()}")
+        return env
+    platform = platform or jax.default_backend()
+    return "pallas-native" if platform == "tpu" else "ref"
+
+
+def supported(platform: str, kernel: str, monoid, dtype) -> tuple[str, ...]:
+    """Registry view: backend names supporting (platform, kernel, monoid,
+    dtype)."""
+    mono = _monoid_obj(monoid)
+    name = mono.name if not isinstance(monoid, str) else monoid
+    return tuple(n for n, b in BACKENDS.items()
+                 if b.supports(platform, kernel, name, dtype))
+
+
+def resolve(kernel: str, monoid, dtype=None, platform: Optional[str] = None,
+            choice=None) -> KernelBackend:
+    """Pick the backend for one kernel call, with per-call ref fallback."""
+    if kernel not in KERNELS:
+        raise ValueError(f"unknown kernel {kernel!r}; expected {KERNELS}")
+    mono = _monoid_obj(monoid)
+    dtype = mono.dtype if dtype is None else dtype
+    platform = platform or jax.default_backend()
+    if choice is None:
+        name = default_backend_name(platform)
+        backend = BACKENDS[name]
+    elif isinstance(choice, str):
+        if choice not in BACKENDS:
+            raise ValueError(f"unknown backend {choice!r}; "
+                             f"choose one of {available_backends()}")
+        backend = BACKENDS[choice]
+    else:
+        backend = choice                    # a KernelBackend instance
+    if backend.supports(platform, kernel, mono.name, dtype):
+        return backend
+    ref = BACKENDS["ref"]
+    if backend is not ref and ref.supports(platform, kernel, mono.name,
+                                           dtype):
+        warnings.warn(
+            f"backend {backend.name!r} does not lower kernel={kernel!r} "
+            f"monoid={mono.name!r} dtype={jnp.dtype(dtype).name} on "
+            f"platform={platform!r}; falling back to 'ref'",
+            RuntimeWarning, stacklevel=2)
+        return ref
+    raise ValueError(
+        f"no backend lowers kernel={kernel!r} monoid={mono.name!r} "
+        f"dtype={jnp.dtype(dtype).name} on platform={platform!r}")
+
+
+@dataclasses.dataclass
+class KernelSet:
+    """Layout-bound kernels for one engine, resolved per call."""
+
+    gather: Any
+    scatter: Any
+    spmv: Any
+    names: dict                  # kernel -> backend name actually used
+
+    @property
+    def any_pallas(self) -> bool:
+        return any(n.startswith("pallas") for n in self.names.values())
+
+
+def make_kernels(layout, monoid, backend=None, platform=None,
+                 with_spmv: bool = False) -> KernelSet:
+    """Resolve and construct the gather/scatter (and optionally spmv)
+    kernels for a layout; each call may fall back to ``ref`` on its own."""
+    mono = _monoid_obj(monoid)
+    gb = resolve("gather", mono, platform=platform, choice=backend)
+    sb = resolve("scatter", mono, platform=platform, choice=backend)
+    names = {"gather": gb.name, "scatter": sb.name}
+    spmv = None
+    if with_spmv:
+        vb = resolve("spmv", "add", dtype=jnp.float32, platform=platform,
+                     choice=backend)
+        spmv = vb.spmv(layout)
+        names["spmv"] = vb.name
+    return KernelSet(gather=gb.gather(layout, mono),
+                     scatter=sb.scatter(layout, mono),
+                     spmv=spmv, names=names)

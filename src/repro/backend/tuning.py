@@ -1,0 +1,199 @@
+"""Tile-geometry autotuner: sweep ``edge_tile``/``msg_tile`` per layout.
+
+The paper's §3.1 sizing rule ("one partition's vertex data fits the private
+cache") fixes ``q``; what it leaves open — and what §6.4 shows matters — is
+the streaming granularity of the bins.  Here that granularity is the Pallas
+block geometry ``(edge_tile, msg_tile)``, and instead of a hardcoded
+constant the tuner times real compiled kernel calls per candidate, keeps
+the fastest, and caches the winner on disk (``results/tuning/*.json``).
+:func:`repro.graph.layout.build_layout` consults the same cache when its
+``edge_tile``/``msg_tile`` arguments are left unset, so a one-off
+``autotune()`` run feeds every subsequent layout build on that host.
+
+Cache entries are keyed by (platform, backend, log2-bucketed graph size,
+partition count): geometry is a property of the memory hierarchy and the
+scale family, not of one concrete edge set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class TileGeometry:
+    edge_tile: int = 256
+    msg_tile: int = 128
+
+
+DEFAULT_GEOMETRY = TileGeometry()
+
+# Candidate sweeps per platform.  CPU candidates go small (interpret-mode
+# grids and XLA:CPU loops both favour short tiles); TPU candidates stay
+# lane-aligned multiples of 128 going up to the VMEM budget.
+CANDIDATES = {
+    "cpu": (TileGeometry(64, 32), TileGeometry(128, 64),
+            TileGeometry(256, 128), TileGeometry(512, 256)),
+    "tpu": (TileGeometry(256, 128), TileGeometry(512, 256),
+            TileGeometry(1024, 512), TileGeometry(2048, 1024)),
+}
+
+ENV_DIR = "REPRO_TUNING_DIR"
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+def candidates(platform: Optional[str] = None) -> tuple[TileGeometry, ...]:
+    platform = platform or jax.default_backend()
+    return CANDIDATES.get(platform, CANDIDATES["cpu"])
+
+
+def cache_dir_path(cache_dir=None) -> Path:
+    if cache_dir is not None:
+        return Path(cache_dir)
+    env = os.environ.get(ENV_DIR)
+    return Path(env) if env else _REPO_ROOT / "results" / "tuning"
+
+
+def _cache_key(n: int, m: int, k: int, weighted: bool, platform: str,
+               backend: str) -> str:
+    # log2 buckets: one sweep covers the whole scale family
+    return (f"{platform}-{backend}-n{int(n).bit_length()}"
+            f"-m{int(m).bit_length()}-k{k}-{'w' if weighted else 'u'}")
+
+
+def load_cached(n, m, k, weighted, platform, backend,
+                cache_dir=None) -> Optional[TileGeometry]:
+    path = cache_dir_path(cache_dir) / (
+        _cache_key(n, m, k, weighted, platform, backend) + ".json")
+    if not path.exists():
+        return None
+    try:
+        rec = json.loads(path.read_text())
+        return TileGeometry(int(rec["edge_tile"]), int(rec["msg_tile"]))
+    except (ValueError, KeyError):
+        return None
+
+
+def resolve_geometry(n: int, m: int, k: int, weighted: bool = False,
+                     platform: Optional[str] = None, backend=None,
+                     cache_dir=None) -> TileGeometry:
+    """Tuned geometry if a cached sweep covers this graph family, else the
+    static default.  Never runs a sweep itself (layout builds stay cheap)."""
+    platform = platform or jax.default_backend()
+    bname = backend or registry.default_backend_name(platform)
+    if not isinstance(bname, str):
+        bname = bname.name
+    return (load_cached(n, m, k, weighted, platform, bname, cache_dir)
+            or DEFAULT_GEOMETRY)
+
+
+def _timed(fn, reps: int) -> float:
+    jax.block_until_ready(fn())            # warmup + compile
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def time_layout(layout, backend_name: str, platform: str,
+                kernels=("gather", "scatter", "spmv"), reps: int = 3,
+                monoid: str = "add") -> dict:
+    """Time one compiled call of each kernel on a built layout."""
+    rng = np.random.default_rng(0)
+    out = {}
+    dtype = jnp.float32
+    # jit the layout-bound callables so the ref backend is timed as one
+    # compiled program, exactly as the engines run it
+    if "gather" in kernels:
+        b = registry.resolve("gather", monoid, dtype=dtype,
+                             platform=platform, choice=backend_name)
+        gk = jax.jit(b.gather(layout, monoid).__call__)
+        ev = jnp.asarray(
+            rng.integers(0, 64, layout.num_edges).astype(np.float32))
+        valid = jnp.asarray(layout.edge_valid)
+        pa = jnp.ones((layout.k,), jnp.int32)
+        out["gather"] = _timed(lambda: gk(ev, valid, pa), reps)
+    if "scatter" in kernels:
+        b = registry.resolve("scatter", monoid, dtype=dtype,
+                             platform=platform, choice=backend_name)
+        sk = jax.jit(b.scatter(layout, monoid).__call__)
+        x = jnp.asarray(rng.integers(0, 64, layout.n_pad).astype(np.float32))
+        act = jnp.ones((layout.n_pad,), jnp.int32)
+        out["scatter"] = _timed(lambda: sk(x, act), reps)
+    if "spmv" in kernels:
+        b = registry.resolve("spmv", "add", dtype=dtype, platform=platform,
+                             choice=backend_name)
+        vk = jax.jit(b.spmv(layout).__call__)
+        x = jnp.asarray(rng.integers(0, 64, layout.n_pad).astype(np.float32))
+        out["spmv"] = _timed(lambda: vk(x), reps)
+    return out
+
+
+def autotune(g, k: Optional[int] = None, backend=None,
+             platform: Optional[str] = None,
+             kernels=("gather", "scatter", "spmv"), reps: int = 3,
+             cache_dir=None, force: bool = False) -> TileGeometry:
+    """Sweep candidate tile geometries for graph ``g``; cache the winner.
+
+    Returns the fastest :class:`TileGeometry` by summed kernel time.  The
+    winner is written to ``<cache_dir>/<key>.json`` so later
+    ``build_layout(..., edge_tile=None)`` calls on the same graph family
+    pick it up without re-sweeping.
+    """
+    from ..graph.layout import build_layout, resolve_k
+    platform = platform or jax.default_backend()
+    bname = backend or registry.default_backend_name(platform)
+    if not isinstance(bname, str):
+        bname = bname.name
+    kk = resolve_k(g.n, k)
+    if not force:
+        hit = load_cached(g.n, g.m, kk, g.weighted, platform, bname,
+                          cache_dir)
+        if hit is not None:
+            return hit
+    sweeps = []
+    for geom in candidates(platform):
+        L = build_layout(g, k=k, edge_tile=geom.edge_tile,
+                         msg_tile=geom.msg_tile)
+        times = time_layout(L, bname, platform, kernels=kernels, reps=reps)
+        sweeps.append({"edge_tile": geom.edge_tile,
+                       "msg_tile": geom.msg_tile,
+                       "wall_s": sum(times.values()), "kernels": times})
+    best = min(sweeps, key=lambda s: s["wall_s"])
+    rec = {
+        "edge_tile": best["edge_tile"], "msg_tile": best["msg_tile"],
+        "platform": platform, "backend": bname,
+        "graph": {"n": int(g.n), "m": int(g.m), "k": int(kk),
+                  "weighted": bool(g.weighted)},
+        "sweep": sweeps,
+        "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    cdir = cache_dir_path(cache_dir)
+    cdir.mkdir(parents=True, exist_ok=True)
+    key = _cache_key(g.n, g.m, kk, g.weighted, platform, bname)
+    (cdir / f"{key}.json").write_text(json.dumps(rec, indent=2))
+    return TileGeometry(best["edge_tile"], best["msg_tile"])
+
+
+def tuned_layout(g, k: Optional[int] = None, backend=None,
+                 platform: Optional[str] = None, cache_dir=None,
+                 force: bool = False, **build_kw):
+    """Autotune (or read the cached sweep) and build the layout with the
+    winning geometry."""
+    from ..graph.layout import build_layout
+    geom = autotune(g, k=k, backend=backend, platform=platform,
+                    cache_dir=cache_dir, force=force)
+    return build_layout(g, k=k, edge_tile=geom.edge_tile,
+                        msg_tile=geom.msg_tile, **build_kw)

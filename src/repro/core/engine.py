@@ -31,14 +31,15 @@ predication inside the Pallas kernels skips edge tiles of inactive partitions
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Optional
+import warnings
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..backend import registry as kregistry
 from ..graph.layout import Layout
 from .cost import CostModel
 from .program import VertexProgram
@@ -71,18 +72,29 @@ class Engine:
     """Single-device PPM engine.
 
     mode: 'hybrid' (paper's GPOP), 'dc' (GPOP_DC), 'sc' (GPOP_SC).
-    use_pallas: route the gather fold through the Pallas segment_combine
-    kernel (interpret mode on CPU) instead of jax.ops segment ops.
+    backend: kernel backend for the DC scatter/gather — a name from
+    :mod:`repro.backend.registry` ('ref', 'pallas-interpret',
+    'pallas-native'), a KernelBackend instance, or None to auto-select
+    from the platform / REPRO_KERNEL_BACKEND.
+    use_pallas: deprecated alias (True -> backend='pallas-interpret',
+    False -> backend='ref').
     """
 
     def __init__(self, layout: Layout, program: VertexProgram,
                  mode: str = "hybrid", bw_ratio: float = 2.0,
-                 use_pallas: bool = False):
+                 backend: Union[str, "kregistry.KernelBackend", None] = None,
+                 use_pallas: Optional[bool] = None):
         assert mode in ("hybrid", "dc", "sc")
+        if use_pallas is not None:
+            warnings.warn(
+                "Engine(use_pallas=...) is deprecated; pass "
+                "backend='pallas-interpret' / 'ref' instead",
+                DeprecationWarning, stacklevel=2)
+            if backend is None:
+                backend = "pallas-interpret" if use_pallas else "ref"
         self.layout = layout
         self.program = program
         self.mode = mode
-        self.use_pallas = use_pallas
         self.cost = CostModel.from_layout(layout, bw_ratio=bw_ratio)
         L = layout
         self.k, self.q, self.n_pad = L.k, L.q, L.n_pad
@@ -116,28 +128,33 @@ class Engine:
             return counts, ea
         self._part_stats = _part_stats
 
-        if use_pallas:
-            from ..kernels import ops as kops
-            mono = program.monoid
-            assert mono.name in ("add", "min", "max"), \
-                f"Pallas gather kernel does not support monoid {mono.name}"
-            self._gather_kernel = kops.GatherKernel(
-                layout, mono.name, mono.dtype, interpret=True)
-            self._scatter_kernel = kops.ScatterKernel(
-                layout, mono.name, mono.dtype, interpret=True)
+        # kernel construction goes through the backend registry; each of
+        # gather/scatter may fall back to 'ref' on its own when the chosen
+        # backend has no lowering for this (monoid, dtype, platform)
+        kset = kregistry.make_kernels(layout, program.monoid,
+                                      backend=backend)
+        self.kernels = kset
+        self.backend_names = kset.names
+        self.use_pallas = kset.any_pallas          # introspection compat
+        self._gather_kernel = kset.gather
+        self._scatter_kernel = kset.scatter
+        # SC-stream monoid fold + touched flags (compaction is
+        # data-dependent, so it always runs the registry's ref fold)
+        self._fold = kregistry.BACKENDS["ref"].segment_fold(program.monoid)
+        self._step_cache = {}                      # (bv, be) -> jitted step
 
     # ------------------------------------------------------------------
-    def _fold(self, vals, valid, ids, num_segments):
-        """Monoid fold + touched flags (pure-jnp path)."""
-        mono = self.program.monoid
-        acc = mono.segment_fold(vals, ids, num_segments)
-        touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
-                                      num_segments=num_segments) > 0
-        return acc, touched
-
-    # ------------------------------------------------------------------
-    @functools.lru_cache(maxsize=128)
     def _step_fn(self, bv: int, be: int):
+        """Jitted iteration for static SC budgets (bv, be), cached per
+        instance (an lru_cache on the method would pin ``self`` — layout
+        arrays included — for the process lifetime)."""
+        fn = self._step_cache.get((bv, be))
+        if fn is None:
+            fn = self._build_step(bv, be)
+            self._step_cache[(bv, be)] = fn
+        return fn
+
+    def _build_step(self, bv: int, be: int):
         """Build the jitted iteration for static SC budgets (bv, be)."""
         prog, L, mono = self.program, self.layout, self.program.monoid
         n_pad, k, q = self.n_pad, self.k, self.q
@@ -160,15 +177,10 @@ class Engine:
 
             # ---- DC stream (paper Alg. 2: values-only messages over the
             # pre-written dc_bin adjacency) ----
-            if self.use_pallas:
-                msg_data = self._scatter_kernel(
-                    msgs, active & dc_mask[self.vert_part])
-                dc_valid = (active_p[self.png_src]
-                            & dc_mask[self.png_part])
-            else:
-                dc_valid = (active_p[self.png_src]
-                            & dc_mask[self.png_part])         # [NM]
-                msg_data = jnp.where(dc_valid, msgs_p[self.png_src], ident)
+            msg_data = self._scatter_kernel(
+                msgs, active & dc_mask[self.vert_part])
+            dc_valid = (active_p[self.png_src]
+                        & dc_mask[self.png_part])             # [NM]
             msg_data_p = jnp.concatenate(
                 [msg_data, mono.identity_array((1,))])
             dc_valid_p = jnp.concatenate(
@@ -178,15 +190,11 @@ class Engine:
             if prog.apply_weight is not None and self.edge_w is not None:
                 edge_vals = prog.apply_weight(edge_vals, self.edge_w)
                 edge_vals = jnp.where(edge_valid, edge_vals, ident)
-            if self.use_pallas:
-                acc, touched = self._gather_kernel(
-                    edge_vals, edge_valid, dc_mask.astype(jnp.int32))
-                acc = jnp.concatenate([acc, mono.identity_array((1,))])
-                touched = jnp.concatenate(
-                    [touched, jnp.zeros((1,), jnp.bool_)])
-            else:
-                acc, touched = self._fold(edge_vals, edge_valid,
-                                          self.edge_dst, n_pad + 1)
+            acc, touched = self._gather_kernel(
+                edge_vals, edge_valid, dc_mask.astype(jnp.int32))
+            acc = jnp.concatenate([acc, mono.identity_array((1,))])
+            touched = jnp.concatenate(
+                [touched, jnp.zeros((1,), jnp.bool_)])
 
             # ---- SC stream (static budgets; absent when be == 0) ----
             if be > 0:

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..backend import registry as kregistry
 from ..core.engine import _tree_where
 from ..core.program import VertexProgram
 from .compat import NamedSharding, PartitionSpec as P, shard_map
@@ -35,9 +36,17 @@ def _squeeze0(tree):
     return jax.tree_util.tree_map(lambda a: a[0], tree)
 
 
+def _resolve_fold(program: VertexProgram, backend=None):
+    """Shard-local segmented fold through the backend registry (the Pallas
+    kernels have no shard_map-compatible lowering yet, so anything but
+    'ref' falls back with a warning)."""
+    b = kregistry.resolve("fold", program.monoid, choice=backend)
+    return b.segment_fold(program.monoid), b.name
+
+
 def build_dc_step(program: VertexProgram, meta: dict,
                   axis_names: Sequence[str], dense_frontier: bool = False,
-                  wire_bf16: bool = False):
+                  wire_bf16: bool = False, fold=None):
     """Destination-centric distributed iteration (per-device body).
 
     dense_frontier: the app keeps every vertex active every iteration
@@ -51,6 +60,7 @@ def build_dc_step(program: VertexProgram, meta: dict,
     weighted = meta["weighted"]
     axes = tuple(axis_names)
     compress = wire_bf16 and mono.dtype == jnp.float32
+    fold = fold if fold is not None else _resolve_fold(program)[0]
     # wire dtype used end-to-end from scatter through the gather-side slot
     # lookup: adjacent up/down-cast pairs around the collective get
     # cancelled by XLA's algebraic simplifier (observed), so the narrow
@@ -106,9 +116,8 @@ def build_dc_step(program: VertexProgram, meta: dict,
             ev = program.apply_weight(ev, A["in_w"])
         ev = jnp.where(evalid, ev, mono.identity)
         dst = jnp.where(evalid, A["in_dst_local"], nv)
-        acc = mono.segment_fold(ev, dst, nv + 1)[:nv]
-        touched = (jax.ops.segment_max(evalid.astype(jnp.int32), dst,
-                                       num_segments=nv + 1)[:nv]) > 0
+        acc, touched = fold(ev, evalid, dst, nv + 1)
+        acc, touched = acc[:nv], touched[:nv]
 
         st3, activated = program.apply_fn(state, acc, touched, it)
         state = _tree_where(touched, st3, state)
@@ -123,7 +132,8 @@ def build_dc_step(program: VertexProgram, meta: dict,
 
 
 def build_sc_step(program: VertexProgram, meta: dict,
-                  axis_names: Sequence[str], ragged: bool = False):
+                  axis_names: Sequence[str], ragged: bool = False,
+                  fold=None):
     """Source-centric distributed iteration: per-destination compaction +
     ragged exchange.
 
@@ -140,6 +150,7 @@ def build_sc_step(program: VertexProgram, meta: dict,
     cap_pair = meta["cap_pair"]
     weighted = meta["weighted"]
     axes = tuple(axis_names)
+    fold = fold if fold is not None else _resolve_fold(program)[0]
 
     def step(state, active, arrays, it):
         A = _squeeze0(arrays)
@@ -213,9 +224,8 @@ def build_sc_step(program: VertexProgram, meta: dict,
 
         ids = jnp.where(valid, rids, nv)
         vals = jnp.where(valid, rvals, ident)
-        acc = mono.segment_fold(vals, ids, nv + 1)[:nv]
-        touched = (jax.ops.segment_max(valid.astype(jnp.int32), ids,
-                                       num_segments=nv + 1)[:nv]) > 0
+        acc, touched = fold(vals, valid, ids, nv + 1)
+        acc, touched = acc[:nv], touched[:nv]
 
         st3, activated = program.apply_fn(state, acc, touched, it)
         state = _tree_where(touched, st3, state)
@@ -230,7 +240,7 @@ def build_sc_step(program: VertexProgram, meta: dict,
 
 
 def build_hybrid_step(program: VertexProgram, meta: dict,
-                      axis_names: Sequence[str]):
+                      axis_names: Sequence[str], fold=None):
     """Per-partition dual-mode iteration — the paper's exact granularity
     (Eq. 1 decided per partition, not per iteration).
 
@@ -245,6 +255,7 @@ def build_hybrid_step(program: VertexProgram, meta: dict,
     q = nv // kpd
     weighted = meta["weighted"]
     axes = tuple(axis_names)
+    fold = fold if fold is not None else _resolve_fold(program)[0]
 
     def step(state, active, arrays, it, dc_mask):
         A = _squeeze0(arrays)
@@ -276,9 +287,7 @@ def build_hybrid_step(program: VertexProgram, meta: dict,
             ev = program.apply_weight(ev, A["in_w"])
         ev = jnp.where(evalid, ev, ident)
         dst = jnp.where(evalid, A["in_dst_local"], nv)
-        acc = mono.segment_fold(ev, dst, nv + 1)
-        touched = jax.ops.segment_max(evalid.astype(jnp.int32), dst,
-                                      num_segments=nv + 1)
+        acc, touched = fold(ev, evalid, dst, nv + 1)
 
         # ---- SC stream: active vertices of non-DC partitions ----
         vpart = jnp.arange(nv, dtype=jnp.int32) // q
@@ -312,13 +321,10 @@ def build_hybrid_step(program: VertexProgram, meta: dict,
         valid = (col < recv_sizes[:, None]).reshape(-1)
         ids = jnp.where(valid, rids, nv)
         vals = jnp.where(valid, rvals, ident)
-        acc2 = mono.segment_fold(vals, ids, nv + 1)
-        touched2 = jax.ops.segment_max(valid.astype(jnp.int32), ids,
-                                       num_segments=nv + 1)
+        acc2, touched2 = fold(vals, valid, ids, nv + 1)
 
         acc = mono.combine(acc, acc2)[:nv]
-        # segment_max yields INT_MIN on empty segments: compare BEFORE or-ing
-        touched = ((touched > 0) | (touched2 > 0))[:nv]
+        touched = (touched | touched2)[:nv]
 
         st3, activated = program.apply_fn(state, acc, touched, it)
         state = _tree_where(touched, st3, state)
@@ -341,13 +347,15 @@ class DistEngine:
     """
 
     def __init__(self, sharded, program: VertexProgram, mesh,
-                 mode: str = "hybrid", bw_ratio: float = 2.0):
+                 mode: str = "hybrid", bw_ratio: float = 2.0,
+                 backend=None):
         self.sl = sharded
         self.program = program
         self.mesh = mesh
         self.mode = mode
         self.bw_ratio = bw_ratio
         self.axes = tuple(mesh.axis_names)
+        fold, self.backend_name = _resolve_fold(program, backend)
         meta = dict(nv=sharded.nv, S=sharded.S, D=sharded.D,
                     cap_in=sharded.cap_in, cap_pair=sharded.cap_pair,
                     kpd=sharded.kpd, weighted=sharded.weighted)
@@ -361,9 +369,9 @@ class DistEngine:
         deg[:len(sharded.deg)] = sharded.deg
         self.deg = jax.device_put(jnp.asarray(deg), shard)
 
-        dc_body = build_dc_step(program, meta, self.axes)
-        sc_body = build_sc_step(program, meta, self.axes)
-        hy_body = build_hybrid_step(program, meta, self.axes)
+        dc_body = build_dc_step(program, meta, self.axes, fold=fold)
+        sc_body = build_sc_step(program, meta, self.axes, fold=fold)
+        hy_body = build_hybrid_step(program, meta, self.axes, fold=fold)
 
         def wrap(body):
             def fn(state, active, arrays, it):

@@ -121,24 +121,40 @@ class Layout:
         return 2.0 * r * d_v + 3.0 * d_i
 
 
-def build_layout(g: Graph, k: Optional[int] = None,
-                 parallel_units: int = 8,
-                 q_mult: int = 8,
-                 edge_tile: int = 256,
-                 msg_tile: int = 128,
-                 cache_vertices: Optional[int] = None) -> Layout:
-    """Build the partition-centric layout.
-
-    ``k`` defaults to the paper's rule (§3.1): enough partitions that one
-    partition's vertex data fits the private cache (VMEM tile budget,
-    expressed as ``cache_vertices``), and ``k >= 4 * parallel_units``.
-    """
-    n, m = g.n, g.m
+def resolve_k(n: int, k: Optional[int] = None, parallel_units: int = 8,
+              cache_vertices: Optional[int] = None) -> int:
+    """The paper's §3.1 partition-count rule: enough partitions that one
+    partition's vertex data fits the private cache (``cache_vertices``),
+    and ``k >= 4 * parallel_units``; clamped to [1, n]."""
     if k is None:
         k = max(4 * parallel_units, 1)
         if cache_vertices is not None:
             k = max(k, -(-n // cache_vertices))
-    k = max(1, min(k, max(1, n)))
+    return max(1, min(k, max(1, n)))
+
+
+def build_layout(g: Graph, k: Optional[int] = None,
+                 parallel_units: int = 8,
+                 q_mult: int = 8,
+                 edge_tile: Optional[int] = None,
+                 msg_tile: Optional[int] = None,
+                 cache_vertices: Optional[int] = None) -> Layout:
+    """Build the partition-centric layout.
+
+    ``k`` defaults to the paper's rule (§3.1), see :func:`resolve_k`.
+
+    ``edge_tile``/``msg_tile`` left unset resolve through the
+    :mod:`repro.backend.tuning` cache: an ``autotune()`` sweep recorded for
+    this platform/backend/graph family wins, otherwise the static defaults
+    (256/128) apply.
+    """
+    n, m = g.n, g.m
+    k = resolve_k(n, k, parallel_units, cache_vertices)
+    if edge_tile is None or msg_tile is None:
+        from ..backend.tuning import resolve_geometry
+        geom = resolve_geometry(n, m, k, weighted=g.weighted)
+        edge_tile = geom.edge_tile if edge_tile is None else edge_tile
+        msg_tile = geom.msg_tile if msg_tile is None else msg_tile
     q = _pad_to(-(-n // k), q_mult)
     n_pad = k * q
 

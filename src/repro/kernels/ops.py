@@ -1,9 +1,17 @@
-"""Layout-bound jit wrappers around the Pallas kernels.
+"""Layout-bound jit wrappers around the PPM kernels.
 
-``GatherKernel`` / ``ScatterKernel`` bind a :class:`repro.graph.layout.Layout`
-once (moving the static bin-grid geometry to device) and expose the engine-
-facing API.  ``interpret=True`` runs the kernel bodies on CPU for validation;
-on TPU hardware the same calls compile to Mosaic.
+``GatherKernel`` / ``ScatterKernel`` / ``SpmvKernel`` bind a
+:class:`repro.graph.layout.Layout` once (moving the static bin-grid geometry
+to device) and expose the engine-facing API over the Pallas bodies
+(``interpret=True`` runs them on CPU for validation; ``interpret=False``
+compiles to Mosaic on TPU).  ``RefGather`` / ``RefScatter`` / ``RefSpmv``
+are the pure-jnp implementations of the *same* engine-facing API, built on
+:mod:`repro.kernels.ref` — the semantic oracle and the fast CPU path.
+
+Engines do not pick between them directly: construct kernels through
+:func:`repro.backend.registry.make_kernels` (or the :func:`make_kernels`
+convenience re-export below), which resolves the backend from the platform,
+the ``REPRO_KERNEL_BACKEND`` override, and per-combination support.
 """
 from __future__ import annotations
 
@@ -101,5 +109,80 @@ class SpmvKernel:
         return jnp.where(self.has_tiles > 0, y, 0.0).reshape(-1)
 
 
+class RefGather:
+    """Pure-jnp gather fold with GatherKernel's exact call contract.
+
+    Unlike the raw :func:`repro.kernels.ref.segment_combine_ref` oracle it
+    also applies the 2-level active list (tiles of inactive source
+    partitions contribute nothing) and masks invalid slots to the monoid
+    identity, so it is interchangeable with the Pallas kernels under the
+    engine and under parity tests.
+    """
+
+    def __init__(self, layout, monoid):
+        self.monoid = monoid
+        self.n_pad = layout.n_pad
+        self.edge_dst = jnp.asarray(layout.edge_dst)
+        # every edge tile lies inside one (p', p) block: per-edge source
+        # partition is the tile's, repeated
+        self.edge_src_part = jnp.asarray(
+            np.repeat(layout.tile_src_part, layout.edge_tile))
+
+    def __call__(self, edge_vals, edge_valid, part_active):
+        mono = self.monoid
+        valid = (edge_valid.astype(bool)
+                 & (part_active[self.edge_src_part] > 0))
+        vals = jnp.where(valid, edge_vals.astype(mono.dtype), mono.identity)
+        acc = mono.segment_fold(vals, self.edge_dst, self.n_pad + 1)
+        touched = jax.ops.segment_max(valid.astype(jnp.int32), self.edge_dst,
+                                      num_segments=self.n_pad + 1) > 0
+        return acc[:self.n_pad], touched[:self.n_pad]
+
+
+class RefScatter:
+    """Pure-jnp DC scatter with ScatterKernel's exact call contract."""
+
+    def __init__(self, layout, monoid):
+        self.monoid = monoid
+        self.n_pad = layout.n_pad
+        self.png_src = jnp.asarray(layout.png_src)
+        self.png_valid = jnp.asarray(layout.png_src < layout.n_pad)
+
+    def __call__(self, x_flat, active_flat):
+        mono = self.monoid
+        src = jnp.minimum(self.png_src, self.n_pad - 1)
+        ok = self.png_valid & (active_flat.astype(bool)[src])
+        return jnp.where(ok, x_flat.astype(mono.dtype)[src], mono.identity)
+
+
+class RefSpmv:
+    """Pure-jnp partition-centric SpMV with SpmvKernel's call contract."""
+
+    def __init__(self, layout, weighted=None):
+        self.n_pad = layout.n_pad
+        self.weighted = layout.weighted if weighted is None else weighted
+        self.msg_slot = jnp.asarray(layout.msg_slot)
+        self.png_src = jnp.asarray(layout.png_src)
+        self.edge_dst = jnp.asarray(layout.edge_dst)
+        self.edge_valid = jnp.asarray(layout.edge_valid)
+        self.edge_w = (jnp.asarray(layout.edge_w)
+                       if (self.weighted and layout.edge_w is not None)
+                       else None)
+
+    def __call__(self, x_flat):
+        return kref.spmv_block_ref(
+            x_flat, self.msg_slot, self.png_src, self.edge_dst,
+            self.edge_valid, self.edge_w, self.n_pad)
+
+
+def make_kernels(layout, monoid, backend=None, platform=None,
+                 with_spmv=False):
+    """Construct the engine-facing kernel set through the backend registry."""
+    from ..backend import registry
+    return registry.make_kernels(layout, monoid, backend=backend,
+                                 platform=platform, with_spmv=with_spmv)
+
+
 __all__ = ["GatherKernel", "ScatterKernel", "SpmvKernel",
+           "RefGather", "RefScatter", "RefSpmv", "make_kernels",
            "segment_combine", "dc_gather", "spmv_block", "kref"]

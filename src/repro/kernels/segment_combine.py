@@ -62,10 +62,17 @@ def _kernel(tile_dst_ref, tile_src_ref, tile_first_ref,   # scalar prefetch
         cols = jax.lax.broadcasted_iota(jnp.int32, (vals.shape[0], q), 1)
         onehot = (dstl[:, None] == cols) & valid[:, None]   # [T, q]
         if monoid == "add":
-            contrib = jnp.dot(
-                jnp.where(valid, vals, 0).astype(jnp.float32)[None, :],
-                onehot.astype(jnp.float32),
-                preferred_element_type=jnp.float32)[0]
+            if jnp.issubdtype(acc_ref.dtype, jnp.floating):
+                contrib = jnp.dot(
+                    jnp.where(valid, vals, 0).astype(jnp.float32)[None, :],
+                    onehot.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)[0]
+            else:
+                # 32-bit integer state: the f32 MXU round trip truncates
+                # above 2**24, so fold on the VPU in the native dtype
+                masked = jnp.where(onehot, vals[:, None],
+                                   jnp.zeros((), acc_ref.dtype))
+                contrib = jnp.sum(masked, axis=0)
             acc_ref[...] = acc_ref[...] + contrib.astype(acc_ref.dtype)[None, :]
         elif monoid == "min":
             masked = jnp.where(onehot, vals[:, None], ident)

@@ -1,1 +1,2 @@
-from .engine import Server, Request, init_cache, prefill, decode_step
+from .engine import (GraphQuery, GraphQueryServer, Request, Server,
+                     decode_step, init_cache, prefill)

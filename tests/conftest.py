@@ -1,4 +1,5 @@
 import os
+import tempfile
 
 # src/ reaches sys.path via pyproject [tool.pytest.ini_options] pythonpath
 # (inserted before this conftest is imported; pytest>=7 is pinned).
@@ -7,6 +8,13 @@ import os
 # for launch/dryrun.py (set there before any jax import); distributed tests
 # spawn subprocesses with their own XLA_FLAGS.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Keep layouts hermetic: a developer's local autotune sweep (written to
+# results/tuning/) must not leak tuned tile geometry into default
+# build_layout() calls under test.  Tests that exercise the tuning cache
+# set REPRO_TUNING_DIR / cache_dir themselves.
+os.environ["REPRO_TUNING_DIR"] = tempfile.mkdtemp(
+    prefix="repro-tuning-test-")
 
 # Install the JAX version shims (jax.sharding.AxisType, new-style
 # AbstractMesh, make_mesh(axis_types=...)) before test modules import them.

@@ -1,0 +1,294 @@
+"""repro.backend: registry resolution, cross-backend parity, tuning cache,
+and the engine-level rewiring (use_pallas alias, per-instance step cache)."""
+import gc
+import json
+import sys
+import warnings
+import weakref
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps.bfs import bfs, bfs_program
+from repro.backend import registry, tuning
+from repro.core import monoid as M
+from repro.core.engine import Engine
+from repro.graph import build_layout, rmat
+
+ON_TPU = jax.default_backend() == "tpu"
+PARITY_BACKENDS = ["ref", "pallas-interpret"] + (["pallas-native"]
+                                                 if ON_TPU else [])
+
+MONOIDS = {
+    ("add", "float32"): lambda: M.add(jnp.float32),
+    ("add", "int32"): lambda: M.add(jnp.int32),
+    ("min", "float32"): lambda: M.min_(jnp.float32),
+    ("min", "int32"): lambda: M.min_(jnp.int32),
+    ("max", "float32"): lambda: M.max_(jnp.float32),
+    ("max", "int32"): lambda: M.max_(jnp.int32),
+}
+
+
+@pytest.fixture(scope="module")
+def layout():
+    g = rmat(7, 8, seed=11, weighted=False)
+    return build_layout(g, k=4, edge_tile=32, msg_tile=16)
+
+
+def _edge_vals(rng, L, dtype):
+    # integer-valued payloads: add-folds are exact in f32, so every backend
+    # must agree bit-for-bit regardless of fold order
+    v = rng.integers(0, 64, L.num_edges)
+    return jnp.asarray(v.astype(np.dtype(dtype)))
+
+
+def _vertex_vals(rng, L, dtype):
+    v = rng.integers(0, 64, L.n_pad)
+    return jnp.asarray(v.astype(np.dtype(dtype)))
+
+
+# ----------------------------------------------------------------------
+# parity: ref / pallas-interpret / (TPU) pallas-native, bit-exact
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "int32"])
+@pytest.mark.parametrize("monoid", ["add", "min", "max"])
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+def test_gather_parity(layout, rng, backend, monoid, dtype):
+    mono = MONOIDS[(monoid, dtype)]()
+    b = registry.BACKENDS[backend]
+    gk = b.gather(layout, mono)
+    ref = registry.BACKENDS["ref"].gather(layout, mono)
+    ev = _edge_vals(rng, layout, dtype)
+    valid = jnp.asarray(layout.edge_valid) \
+        & jnp.asarray(rng.random(layout.num_edges) < 0.7)
+    pa = jnp.asarray((rng.random(layout.k) < 0.7).astype(np.int32))
+    acc, touched = gk(ev, valid, pa)
+    racc, rtouched = ref(ev, valid, pa)
+    assert np.array_equal(np.asarray(touched), np.asarray(rtouched))
+    assert np.array_equal(np.asarray(acc), np.asarray(racc))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "int32"])
+@pytest.mark.parametrize("monoid", ["add", "min", "max"])
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+def test_scatter_parity(layout, rng, backend, monoid, dtype):
+    mono = MONOIDS[(monoid, dtype)]()
+    b = registry.BACKENDS[backend]
+    sk = b.scatter(layout, mono)
+    ref = registry.BACKENDS["ref"].scatter(layout, mono)
+    x = _vertex_vals(rng, layout, dtype)
+    active = jnp.asarray(
+        (rng.random(layout.n_pad) < 0.5).astype(np.int32))
+    assert np.array_equal(np.asarray(sk(x, active)),
+                          np.asarray(ref(x, active)))
+
+
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+def test_spmv_parity(layout, rng, backend):
+    b = registry.BACKENDS[backend]
+    vk = b.spmv(layout)
+    ref = registry.BACKENDS["ref"].spmv(layout)
+    x = _vertex_vals(rng, layout, "float32")
+    assert np.array_equal(np.asarray(vk(x)), np.asarray(ref(x)))
+
+
+def test_gather_int32_above_2_24(layout, rng):
+    """min/max/add over int32 state beyond the f32 mantissa must round-trip
+    exactly (the one-hot MXU path used to truncate through float32)."""
+    big = (1 << 24) + rng.integers(1, 1000, layout.num_edges)
+    ev = jnp.asarray(big.astype(np.int32))
+    valid = jnp.asarray(layout.edge_valid) \
+        & jnp.asarray(rng.random(layout.num_edges) < 0.05)
+    pa = jnp.ones((layout.k,), jnp.int32)
+    for name in ("min", "max", "add"):
+        mono = MONOIDS[(name, "int32")]()
+        gk = registry.BACKENDS["pallas-interpret"].gather(layout, mono)
+        acc, touched = gk(ev, valid, pa)
+        racc, rtouched = registry.BACKENDS["ref"].gather(layout, mono)(
+            ev, valid, pa)
+        assert np.array_equal(np.asarray(acc), np.asarray(racc)), name
+        # and the surviving values really are the un-truncated payloads
+        tm = np.asarray(touched)
+        if name in ("min", "max") and tm.any():
+            assert (np.asarray(acc)[tm] > (1 << 24)).all()
+
+
+def test_scatter_int32_above_2_24(layout, rng):
+    mono = MONOIDS[("min", "int32")]()
+    sk = registry.BACKENDS["pallas-interpret"].scatter(layout, mono)
+    big = (1 << 24) + rng.integers(1, 1000, layout.n_pad)
+    x = jnp.asarray(big.astype(np.int32))
+    active = jnp.ones((layout.n_pad,), jnp.int32)
+    msg = np.asarray(sk(x, active))
+    real = np.asarray(layout.png_src) < layout.n_pad
+    assert (msg[real] > (1 << 24)).all()
+
+
+# ----------------------------------------------------------------------
+# registry: selection, env override, unsupported-combo fallback
+# ----------------------------------------------------------------------
+
+def test_env_override_selects_backend(monkeypatch):
+    monkeypatch.setenv(registry.ENV_VAR, "pallas-interpret")
+    assert registry.default_backend_name("cpu") == "pallas-interpret"
+    monkeypatch.setenv(registry.ENV_VAR, "ref")
+    assert registry.default_backend_name("cpu") == "ref"
+    monkeypatch.setenv(registry.ENV_VAR, "no-such-backend")
+    with pytest.raises(ValueError, match="no-such-backend"):
+        registry.default_backend_name("cpu")
+
+
+@pytest.mark.parametrize("env", ["ref", "pallas-interpret"])
+def test_env_override_end_to_end(layout, monkeypatch, env):
+    monkeypatch.setenv(registry.ENV_VAR, env)
+    eng = Engine(layout, bfs_program())
+    assert eng.backend_names == {"gather": env, "scatter": env}
+    res = bfs(layout, source=3, engine=eng)
+    ref = bfs(layout, source=3, backend="ref")
+    assert np.array_equal(res["level"], ref["level"])
+    assert np.array_equal(res["parent"], ref["parent"])
+
+
+def test_unsupported_combo_falls_back_to_ref(layout):
+    # pallas-native cannot lower on a CPU host -> per-call ref fallback
+    if ON_TPU:
+        pytest.skip("fallback path is the non-TPU behaviour")
+    with pytest.warns(RuntimeWarning, match="falling back to 'ref'"):
+        b = registry.resolve("gather", "add", jnp.float32,
+                             choice="pallas-native")
+    assert b.name == "ref"
+    # a monoid outside the Pallas set falls back even for pallas-interpret
+    with pytest.warns(RuntimeWarning, match="min_with_payload"):
+        b = registry.resolve("gather", M.min_with_payload(),
+                             choice="pallas-interpret")
+    assert b.name == "ref"
+    # ... and the registry view agrees
+    assert registry.supported("cpu", "gather", "min_with_payload",
+                              jnp.uint64) == ("ref",)
+    with pytest.raises(ValueError, match="unknown backend"):
+        registry.resolve("gather", "add", choice="cuda")
+
+
+def test_supported_matrix():
+    assert set(registry.supported("cpu", "gather", "add", jnp.float32)) \
+        == {"ref", "pallas-interpret"}
+    assert set(registry.supported("tpu", "gather", "add", jnp.float32)) \
+        == {"ref", "pallas-interpret", "pallas-native"}
+    assert registry.supported("cpu", "fold", "add", jnp.float32) == ("ref",)
+    # spmv is an add/float kernel on every backend
+    assert registry.supported("cpu", "spmv", "min", jnp.float32) == ()
+
+
+# ----------------------------------------------------------------------
+# engine rewiring: use_pallas alias, per-instance step cache
+# ----------------------------------------------------------------------
+
+def test_use_pallas_alias_matches_backend(layout):
+    with pytest.deprecated_call():
+        old = bfs(layout, source=3, use_pallas=True)
+    new = bfs(layout, source=3, backend="pallas-interpret")
+    assert np.array_equal(old["level"], new["level"])
+    assert np.array_equal(old["parent"], new["parent"])
+
+
+def test_step_cache_is_per_instance(layout):
+    assert not hasattr(Engine._step_fn, "cache_info"), \
+        "lru_cache on a method pins self (layout arrays) process-wide"
+    eng = Engine(layout, bfs_program(), backend="ref")
+    fn = eng._step_fn(0, 0)
+    assert eng._step_fn(0, 0) is fn and (0, 0) in eng._step_cache
+    other = Engine(layout, bfs_program(), backend="ref")
+    assert other._step_cache == {}          # cache is not shared
+    ref = weakref.ref(eng)
+    del eng, fn
+    gc.collect()
+    assert ref() is None, "engine must be collectable once dropped"
+
+
+# ----------------------------------------------------------------------
+# tuning: sweep, disk cache, layout feedback
+# ----------------------------------------------------------------------
+
+def test_autotune_caches_and_feeds_layout(tmp_path, monkeypatch):
+    g = rmat(6, 8, seed=2)
+    geom = tuning.autotune(g, k=4, backend="ref", cache_dir=tmp_path,
+                           reps=1)
+    files = list(Path(tmp_path).glob("*.json"))
+    assert len(files) == 1
+    rec = json.loads(files[0].read_text())
+    assert rec["edge_tile"] == geom.edge_tile
+    assert rec["msg_tile"] == geom.msg_tile
+    assert len(rec["sweep"]) == len(tuning.candidates())
+    # second call is a cache hit (sweep entries unchanged on disk)
+    assert tuning.autotune(g, k=4, backend="ref",
+                           cache_dir=tmp_path) == geom
+    # build_layout with tiles unset resolves through the same cache
+    monkeypatch.setenv(tuning.ENV_DIR, str(tmp_path))
+    monkeypatch.setenv(registry.ENV_VAR, "ref")
+    L = build_layout(g, k=4)
+    assert (L.edge_tile, L.msg_tile) == (geom.edge_tile, geom.msg_tile)
+    L2 = tuning.tuned_layout(g, k=4, backend="ref", cache_dir=tmp_path)
+    assert (L2.edge_tile, L2.msg_tile) == (geom.edge_tile, geom.msg_tile)
+
+
+def test_resolve_geometry_default_without_cache(tmp_path):
+    assert tuning.resolve_geometry(100, 800, 8, cache_dir=tmp_path) \
+        == tuning.DEFAULT_GEOMETRY
+
+
+# ----------------------------------------------------------------------
+# serving tier + benchmark harness ride the same registry
+# ----------------------------------------------------------------------
+
+def test_graph_query_server(layout):
+    from repro.serve import GraphQuery, GraphQueryServer
+    srv = GraphQueryServer(layout, backend="ref")
+    srv.submit(GraphQuery(0, "bfs", {"source": 0}))
+    srv.submit(GraphQuery(1, "bfs", {"source": 5}))
+    srv.submit(GraphQuery(2, "pagerank", {"iters": 3}))
+    done = srv.run()
+    assert [q.qid for q in done] == [0, 1, 2]
+    assert np.array_equal(done[1].result["level"],
+                          bfs(layout, source=5)["level"])
+    assert list(srv._engines) == ["bfs"]    # one shared engine, two queries
+
+
+def test_graph_query_server_per_query_overrides(layout):
+    """mode/backend in params bypass the shared engine instead of being
+    silently dropped or colliding with the explicit kwargs."""
+    from repro.apps.pagerank import pagerank
+    from repro.serve import GraphQuery, GraphQueryServer
+    srv = GraphQueryServer(layout, backend="ref")
+    srv.submit(GraphQuery(0, "bfs", {"source": 0, "mode": "dc"}))
+    srv.submit(GraphQuery(1, "pagerank", {"iters": 3, "mode": "dc",
+                                          "backend": "pallas-interpret"}))
+    srv.submit(GraphQuery(2, "cc", {"mode": "sc"}))
+    done = srv.run()
+    assert srv._engines == {}               # every query overrode the mode
+    assert np.array_equal(done[0].result["level"],
+                          bfs(layout, source=0)["level"])
+    np.testing.assert_allclose(done[1].result["pr"],
+                               pagerank(layout, iters=3)["pr"], rtol=1e-6)
+    assert done[2].result["label"] is not None
+
+
+def test_bench_kernels_smoke(tmp_path):
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    try:
+        from benchmarks import bench_kernels
+    finally:
+        sys.path.pop(0)
+    out = tmp_path / "BENCH_kernels.json"
+    doc = bench_kernels.run(scales=[6], backends=["ref", "pallas-interpret"],
+                            reps=1, k=4, out_path=out)
+    disk = json.loads(out.read_text())
+    assert disk == doc
+    assert disk["meta"]["platform"] == jax.default_backend()
+    rows = disk["results"]
+    assert {r["kernel"] for r in rows} == {"gather", "scatter", "spmv"}
+    assert {r["backend"] for r in rows} == {"ref", "pallas-interpret"}
+    assert all(r["wall_s"] > 0 for r in rows)
