@@ -5,11 +5,14 @@
       [--out BENCH_kernels.json]
 
 Times one compiled call of each of ``gather`` (segment_combine), ``scatter``
-(dc_gather) and ``spmv`` (spmv_block) for every backend the registry can
-lower on this platform, across rmat graph scales, and writes the results to
-``BENCH_kernels.json`` at the repo root — the perf-trajectory artifact every
-hot-path PR regenerates.  ``--smoke`` (used by CI) runs one tiny scale with
-a single repetition so the emission path can never silently rot.
+(dc_gather), ``spmv`` (spmv_block) and ``fold`` (fold_block — the blocked
+segmented fold behind the distributed gather) for every backend the registry
+can lower on this platform, across rmat graph scales, and writes the results
+to ``BENCH_kernels.json`` at the repo root — the perf-trajectory artifact
+every hot-path PR regenerates.  ``--smoke`` (used by CI) runs two small
+scales at best-of-2 so the emission path can never silently rot; CI
+compares the smoke rows against the committed baseline with
+``tools/check_bench_regression.py``.
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ from repro.backend import registry, tuning
 from repro.graph import build_layout, rmat
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
-KERNELS = ("gather", "scatter", "spmv")
+KERNELS = ("gather", "scatter", "spmv", "fold")
 
 
 def bench_backend(layout, backend_name: str, platform: str, reps: int):
@@ -41,6 +44,8 @@ def bench_backend(layout, backend_name: str, platform: str, reps: int):
         t = tuning.time_layout(layout, backend_name, platform,
                                kernels=(kernel,), reps=reps,
                                monoid=monoid)
+        if kernel not in t:
+            continue     # e.g. fold past the segment cap: ref would run
         rows.append({"kernel": kernel, "monoid": monoid,
                      "backend": backend_name, "wall_s": t[kernel]})
     return rows
@@ -58,7 +63,8 @@ def run(scales, backends, reps: int, k: int, out_path: Path) -> dict:
                 r.update(scale=scale, n=int(g.n), m=int(g.m),
                          k=int(layout.k), q=int(layout.q),
                          edge_tile=int(layout.edge_tile),
-                         msg_tile=int(layout.msg_tile))
+                         msg_tile=int(layout.msg_tile),
+                         fold_tile=int(layout.fold_tile))
                 results.append(r)
             print(f"scale={scale} backend={backend_name}: "
                   + (", ".join(f"{r['kernel']}={r['wall_s']*1e3:.3f}ms"
@@ -93,8 +99,10 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.smoke:
-        scales = [6]
-        reps = 1
+        # two scales x best-of-2: enough signal for the CI regression
+        # guard's machine calibration without a full bench run
+        scales = [6, 8]
+        reps = 2
     else:
         scales = [int(s) for s in (args.scales or "8,10,12").split(",")]
         reps = args.reps

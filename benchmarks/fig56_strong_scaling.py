@@ -24,7 +24,7 @@ import jax, jax.numpy as jnp
 from repro.dist.compat import AxisType, make_mesh
 from repro.graph import rmat, build_layout
 from repro.graph.shard import shard_layout
-from repro.core.dist_engine import DistEngine
+from repro.dist.engine import DistEngine
 from repro.apps.bfs import bfs_program
 from repro.apps.pagerank import pagerank_program
 

@@ -27,8 +27,47 @@ Backends register per ``(platform, kernel, monoid, dtype)`` support;
 :func:`repro.backend.registry.resolve` picks one from
 ``jax.default_backend()``, honours the ``REPRO_KERNEL_BACKEND`` override,
 and falls back to ``ref`` per call when a lowering is unsupported.  Tile
-geometry (``edge_tile``/``msg_tile`` — the §3.1 partition-sizing rule) is
-swept empirically by :mod:`repro.backend.tuning` and cached on disk.
+geometry (``edge_tile``/``msg_tile``/``fold_tile`` — the §3.1
+partition-sizing rule) is swept empirically by
+:mod:`repro.backend.tuning` and cached on disk.
+
+Kernel ``fold`` — the blocked segmented fold
+--------------------------------------------
+
+``resolve("fold", monoid).segment_fold(monoid, tile=None)`` returns a
+callable with the contract::
+
+    acc, touched = fold(vals, valid, ids, num_segments)
+
+    vals  [N]   message value per slot (any 4-byte add/min/max dtype)
+    valid [N]   bool/int; invalid slots contribute nothing
+    ids   [N]   int32 segment per slot; ids outside [0, num_segments)
+                contribute nothing (engines park sentinels in the
+                overflow bin num_segments - 1)
+    acc     [num_segments]  monoid fold (identity where untouched)
+    touched [num_segments]  bool, True iff a valid message landed there
+
+It is the Gather phase as a *stream* kernel: no layout binding, no
+``jax.ops.segment_*``, no scatter in the lowering, so it traces inside
+``shard_map`` bodies and is what ``DistEngine`` folds each device's
+received bin column with (and the single-device engine its compacted SC
+stream).  Unlike every other kernel it defaults to Pallas on all
+platforms (``pallas-native`` on TPU, ``pallas-interpret`` elsewhere);
+``REPRO_KERNEL_BACKEND=ref`` opts out.
+
+The message-tile knob — how many stream slots one grid step folds from
+VMEM — resolves in order: the ``tile=`` argument (engines pass the
+layout's tuned ``fold_tile``), the ``REPRO_FOLD_TILE`` environment
+variable, then the static default
+(:data:`repro.kernels.fold_block.DEFAULT_FOLD_TILE`).  ``autotune()``
+sweeps it jointly with ``edge_tile``/``msg_tile``.
+
+The blocked combine is O(stream × segments) with the whole accumulator
+VMEM-resident, so past ``REPRO_FOLD_MAX_SEGMENTS`` segments (default
+4096 — the point where one grid step's one-hot block outgrows a TPU
+core's VMEM) the kernel transparently runs the ref fold instead: huge
+per-device vertex counts are outside the paper's cache-resident regime
+by definition.
 """
 from __future__ import annotations
 

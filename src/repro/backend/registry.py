@@ -17,6 +17,13 @@ dtype)`` combination (e.g. a ``min_with_payload`` uint64 fold, or any
 ``pallas-native`` call on a CPU host), that *call* falls back to ``ref``
 with a warning instead of failing — the rest of the engine keeps its
 chosen backend.
+
+Kernel ``fold`` (the shard_map-side blocked segmented fold,
+:mod:`repro.kernels.fold_block`) is the one kernel whose *platform
+default* is Pallas everywhere: ``pallas-native`` on TPU and
+``pallas-interpret`` on other hosts, so the distributed gather runs the
+paper's blocked VMEM fold — never ``jax.ops`` scatter-adds — unless
+``REPRO_KERNEL_BACKEND=ref`` explicitly opts out.
 """
 from __future__ import annotations
 
@@ -43,15 +50,6 @@ def _monoid_obj(monoid):
     return monoid
 
 
-def _fold_with_touched(mono):
-    def fold(vals, valid, ids, num_segments):
-        acc = mono.segment_fold(vals, ids, num_segments)
-        touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
-                                      num_segments=num_segments) > 0
-        return acc, touched
-    return fold
-
-
 @runtime_checkable
 class KernelBackend(Protocol):
     """Factory for layout-bound kernels sharing the engine-facing API."""
@@ -67,7 +65,7 @@ class KernelBackend(Protocol):
 
     def spmv(self, layout, weighted=None) -> Any: ...
 
-    def segment_fold(self, monoid) -> Any: ...
+    def segment_fold(self, monoid, tile=None) -> Any: ...
 
 
 class RefBackend:
@@ -90,8 +88,8 @@ class RefBackend:
     def spmv(self, layout, weighted=None):
         return kops.RefSpmv(layout, weighted=weighted)
 
-    def segment_fold(self, monoid):
-        return _fold_with_touched(_monoid_obj(monoid))
+    def segment_fold(self, monoid, tile=None):
+        return kops.RefFold(_monoid_obj(monoid))
 
 
 class PallasBackend:
@@ -104,12 +102,10 @@ class PallasBackend:
     def supports(self, platform, kernel, monoid, dtype):
         if not self.interpret and platform != "tpu":
             return False                     # Mosaic lowering is TPU-only
-        if kernel == "fold":
-            return False                     # shard_map-side fold: ref only
         dt = jnp.dtype(dtype)
         if kernel == "spmv":
             return monoid == "add" and dt == jnp.float32
-        if kernel not in ("gather", "scatter"):
+        if kernel not in ("gather", "scatter", "fold"):
             return False
         return monoid in PALLAS_MONOIDS and dt.kind in "fiu" \
             and dt.itemsize == 4
@@ -128,10 +124,10 @@ class PallasBackend:
         return kops.SpmvKernel(layout, interpret=self.interpret,
                                weighted=weighted)
 
-    def segment_fold(self, monoid):
-        raise NotImplementedError(
-            f"{self.name} has no shard_map-compatible fold; resolve() "
-            "falls back to ref for kernel='fold'")
+    def segment_fold(self, monoid, tile=None):
+        mono = _monoid_obj(monoid)
+        return kops.FoldKernel(mono.name, mono.dtype,
+                               interpret=self.interpret, tile=tile)
 
 
 BACKENDS: dict[str, KernelBackend] = {
@@ -145,8 +141,14 @@ def available_backends() -> tuple[str, ...]:
     return tuple(BACKENDS)
 
 
-def default_backend_name(platform: Optional[str] = None) -> str:
-    """Platform default, after the ``REPRO_KERNEL_BACKEND`` override."""
+def default_backend_name(platform: Optional[str] = None,
+                         kernel: Optional[str] = None) -> str:
+    """Platform default, after the ``REPRO_KERNEL_BACKEND`` override.
+
+    The default is per-kernel: ``fold`` (no efficient ``jax.ops``-free
+    lowering exists outside Pallas) defaults to the interpreted Pallas
+    kernel even on CPU hosts; everything else keeps ``ref`` off-TPU.
+    """
     env = os.environ.get(ENV_VAR)
     if env:
         if env not in BACKENDS:
@@ -155,7 +157,9 @@ def default_backend_name(platform: Optional[str] = None) -> str:
                 f"choose one of {available_backends()}")
         return env
     platform = platform or jax.default_backend()
-    return "pallas-native" if platform == "tpu" else "ref"
+    if platform == "tpu":
+        return "pallas-native"
+    return "pallas-interpret" if kernel == "fold" else "ref"
 
 
 def supported(platform: str, kernel: str, monoid, dtype) -> tuple[str, ...]:
@@ -175,8 +179,11 @@ def resolve(kernel: str, monoid, dtype=None, platform: Optional[str] = None,
     mono = _monoid_obj(monoid)
     dtype = mono.dtype if dtype is None else dtype
     platform = platform or jax.default_backend()
+    # a fallback is only worth a warning when the backend was *asked for*
+    # (argument or env override); platform defaults degrade silently
+    explicit = choice is not None or bool(os.environ.get(ENV_VAR))
     if choice is None:
-        name = default_backend_name(platform)
+        name = default_backend_name(platform, kernel)
         backend = BACKENDS[name]
     elif isinstance(choice, str):
         if choice not in BACKENDS:
@@ -190,11 +197,12 @@ def resolve(kernel: str, monoid, dtype=None, platform: Optional[str] = None,
     ref = BACKENDS["ref"]
     if backend is not ref and ref.supports(platform, kernel, mono.name,
                                            dtype):
-        warnings.warn(
-            f"backend {backend.name!r} does not lower kernel={kernel!r} "
-            f"monoid={mono.name!r} dtype={jnp.dtype(dtype).name} on "
-            f"platform={platform!r}; falling back to 'ref'",
-            RuntimeWarning, stacklevel=2)
+        if explicit:
+            warnings.warn(
+                f"backend {backend.name!r} does not lower kernel={kernel!r} "
+                f"monoid={mono.name!r} dtype={jnp.dtype(dtype).name} on "
+                f"platform={platform!r}; falling back to 'ref'",
+                RuntimeWarning, stacklevel=2)
         return ref
     raise ValueError(
         f"no backend lowers kernel={kernel!r} monoid={mono.name!r} "
@@ -207,22 +215,27 @@ class KernelSet:
 
     gather: Any
     scatter: Any
+    fold: Any
     spmv: Any
     names: dict                  # kernel -> backend name actually used
 
     @property
     def any_pallas(self) -> bool:
-        return any(n.startswith("pallas") for n in self.names.values())
+        # the fold defaults to Pallas on every platform, so it says nothing
+        # about whether the engine *chose* a Pallas backend
+        return any(n.startswith("pallas") for k, n in self.names.items()
+                   if k != "fold")
 
 
 def make_kernels(layout, monoid, backend=None, platform=None,
                  with_spmv: bool = False) -> KernelSet:
-    """Resolve and construct the gather/scatter (and optionally spmv)
+    """Resolve and construct the gather/scatter/fold (and optionally spmv)
     kernels for a layout; each call may fall back to ``ref`` on its own."""
     mono = _monoid_obj(monoid)
     gb = resolve("gather", mono, platform=platform, choice=backend)
     sb = resolve("scatter", mono, platform=platform, choice=backend)
-    names = {"gather": gb.name, "scatter": sb.name}
+    fb = resolve("fold", mono, platform=platform, choice=backend)
+    names = {"gather": gb.name, "scatter": sb.name, "fold": fb.name}
     spmv = None
     if with_spmv:
         vb = resolve("spmv", "add", dtype=jnp.float32, platform=platform,
@@ -231,4 +244,7 @@ def make_kernels(layout, monoid, backend=None, platform=None,
         names["spmv"] = vb.name
     return KernelSet(gather=gb.gather(layout, mono),
                      scatter=sb.scatter(layout, mono),
+                     fold=fb.segment_fold(mono,
+                                          tile=getattr(layout, "fold_tile",
+                                                       None)),
                      spmv=spmv, names=names)

@@ -1,14 +1,22 @@
-"""Tile-geometry autotuner: sweep ``edge_tile``/``msg_tile`` per layout.
+"""Tile-geometry autotuner: sweep ``edge_tile``/``msg_tile``/``fold_tile``.
 
 The paper's §3.1 sizing rule ("one partition's vertex data fits the private
 cache") fixes ``q``; what it leaves open — and what §6.4 shows matters — is
 the streaming granularity of the bins.  Here that granularity is the Pallas
-block geometry ``(edge_tile, msg_tile)``, and instead of a hardcoded
-constant the tuner times real compiled kernel calls per candidate, keeps
-the fastest, and caches the winner on disk (``results/tuning/*.json``).
-:func:`repro.graph.layout.build_layout` consults the same cache when its
-``edge_tile``/``msg_tile`` arguments are left unset, so a one-off
-``autotune()`` run feeds every subsequent layout build on that host.
+block geometry ``(edge_tile, msg_tile, fold_tile)``, and instead of a
+hardcoded constant the tuner times real compiled kernel calls per
+candidate, keeps the fastest, and caches the winner on disk
+(``results/tuning/*.json``).  :func:`repro.graph.layout.build_layout`
+consults the same cache when its tile arguments are left unset, so a
+one-off ``autotune()`` run feeds every subsequent layout build on this
+host.
+
+``fold_tile`` — the message-block size of the blocked segmented fold
+(:mod:`repro.kernels.fold_block`) — is swept *jointly* with the other two:
+Eq. 1's cost model prices the gather traffic as a function of both the
+bin-stream granularity and the per-partition accumulator residency, so
+the best fold tile shifts with ``edge_tile`` (a bigger edge tile raises
+the message density per bin column and favours a bigger fold block).
 
 Cache entries are keyed by (platform, backend, log2-bucketed graph size,
 partition count): geometry is a property of the memory hierarchy and the
@@ -34,18 +42,24 @@ from . import registry
 class TileGeometry:
     edge_tile: int = 256
     msg_tile: int = 128
+    fold_tile: int = 256
 
 
 DEFAULT_GEOMETRY = TileGeometry()
 
 # Candidate sweeps per platform.  CPU candidates go small (interpret-mode
 # grids and XLA:CPU loops both favour short tiles); TPU candidates stay
-# lane-aligned multiples of 128 going up to the VMEM budget.
+# lane-aligned multiples of 128 going up to the VMEM budget.  fold_tile
+# moves with edge_tile (denser bin columns favour bigger fold blocks) and
+# each edge_tile point carries two fold_tile points so the joint optimum
+# is observable rather than assumed.
 CANDIDATES = {
-    "cpu": (TileGeometry(64, 32), TileGeometry(128, 64),
-            TileGeometry(256, 128), TileGeometry(512, 256)),
-    "tpu": (TileGeometry(256, 128), TileGeometry(512, 256),
-            TileGeometry(1024, 512), TileGeometry(2048, 1024)),
+    "cpu": (TileGeometry(64, 32, 64), TileGeometry(128, 64, 128),
+            TileGeometry(128, 64, 256), TileGeometry(256, 128, 256),
+            TileGeometry(256, 128, 512), TileGeometry(512, 256, 512)),
+    "tpu": (TileGeometry(256, 128, 256), TileGeometry(512, 256, 512),
+            TileGeometry(512, 256, 1024), TileGeometry(1024, 512, 1024),
+            TileGeometry(1024, 512, 2048), TileGeometry(2048, 1024, 2048)),
 }
 
 ENV_DIR = "REPRO_TUNING_DIR"
@@ -79,7 +93,9 @@ def load_cached(n, m, k, weighted, platform, backend,
         return None
     try:
         rec = json.loads(path.read_text())
-        return TileGeometry(int(rec["edge_tile"]), int(rec["msg_tile"]))
+        return TileGeometry(int(rec["edge_tile"]), int(rec["msg_tile"]),
+                            int(rec.get("fold_tile",
+                                        DEFAULT_GEOMETRY.fold_tile)))
     except (ValueError, KeyError):
         return None
 
@@ -108,9 +124,15 @@ def _timed(fn, reps: int) -> float:
 
 
 def time_layout(layout, backend_name: str, platform: str,
-                kernels=("gather", "scatter", "spmv"), reps: int = 3,
-                monoid: str = "add") -> dict:
-    """Time one compiled call of each kernel on a built layout."""
+                kernels=("gather", "scatter", "spmv", "fold"), reps: int = 3,
+                monoid: str = "add", fold_backend=None) -> dict:
+    """Time one compiled call of each kernel on a built layout.
+
+    ``fold_backend`` overrides the backend for the fold row only: the
+    autotuner passes the *per-kernel* platform default there, because the
+    fold's default backend (Pallas everywhere) differs from the other
+    kernels' and ``RefFold`` ignores ``fold_tile`` — sweeping it through
+    ref would select the winner by timing jitter."""
     rng = np.random.default_rng(0)
     out = {}
     dtype = jnp.float32
@@ -138,12 +160,29 @@ def time_layout(layout, backend_name: str, platform: str,
         vk = jax.jit(b.spmv(layout).__call__)
         x = jnp.asarray(rng.integers(0, 64, layout.n_pad).astype(np.float32))
         out["spmv"] = _timed(lambda: vk(x), reps)
+    if "fold" in kernels:
+        # the layout's gather-order edge stream doubles as a realistic
+        # message stream: ids = edge destinations, overflow bin = n_pad
+        from ..kernels.fold_block import max_fold_segments
+        b = registry.resolve("fold", monoid, dtype=dtype, platform=platform,
+                             choice=fold_backend or backend_name)
+        ns = layout.n_pad + 1
+        if b.name.startswith("pallas") and ns > max_fold_segments():
+            return out      # FoldKernel would run ref: don't mislabel a row
+        fold = b.segment_fold(monoid, tile=getattr(layout, "fold_tile",
+                                                   None))
+        fv = jnp.asarray(
+            rng.integers(0, 64, layout.num_edges).astype(np.float32))
+        fvalid = jnp.asarray(layout.edge_valid)
+        fids = jnp.where(fvalid, jnp.asarray(layout.edge_dst), ns - 1)
+        fk = jax.jit(lambda v, va, i: fold(v, va, i, ns))
+        out["fold"] = _timed(lambda: fk(fv, fvalid, fids), reps)
     return out
 
 
 def autotune(g, k: Optional[int] = None, backend=None,
              platform: Optional[str] = None,
-             kernels=("gather", "scatter", "spmv"), reps: int = 3,
+             kernels=("gather", "scatter", "spmv", "fold"), reps: int = 3,
              cache_dir=None, force: bool = False) -> TileGeometry:
     """Sweep candidate tile geometries for graph ``g``; cache the winner.
 
@@ -163,17 +202,25 @@ def autotune(g, k: Optional[int] = None, backend=None,
                           cache_dir)
         if hit is not None:
             return hit
+    # sweep the fold through the backend engines really resolve for it
+    # (Pallas by default) unless the caller pinned one explicitly
+    fold_bname = (bname if backend is not None
+                  else registry.default_backend_name(platform, "fold"))
     sweeps = []
     for geom in candidates(platform):
         L = build_layout(g, k=k, edge_tile=geom.edge_tile,
-                         msg_tile=geom.msg_tile)
-        times = time_layout(L, bname, platform, kernels=kernels, reps=reps)
+                         msg_tile=geom.msg_tile,
+                         fold_tile=geom.fold_tile)
+        times = time_layout(L, bname, platform, kernels=kernels, reps=reps,
+                            fold_backend=fold_bname)
         sweeps.append({"edge_tile": geom.edge_tile,
                        "msg_tile": geom.msg_tile,
+                       "fold_tile": geom.fold_tile,
                        "wall_s": sum(times.values()), "kernels": times})
     best = min(sweeps, key=lambda s: s["wall_s"])
     rec = {
         "edge_tile": best["edge_tile"], "msg_tile": best["msg_tile"],
+        "fold_tile": best["fold_tile"],
         "platform": platform, "backend": bname,
         "graph": {"n": int(g.n), "m": int(g.m), "k": int(kk),
                   "weighted": bool(g.weighted)},
@@ -184,7 +231,8 @@ def autotune(g, k: Optional[int] = None, backend=None,
     cdir.mkdir(parents=True, exist_ok=True)
     key = _cache_key(g.n, g.m, kk, g.weighted, platform, bname)
     (cdir / f"{key}.json").write_text(json.dumps(rec, indent=2))
-    return TileGeometry(best["edge_tile"], best["msg_tile"])
+    return TileGeometry(best["edge_tile"], best["msg_tile"],
+                        best["fold_tile"])
 
 
 def tuned_layout(g, k: Optional[int] = None, backend=None,
@@ -196,4 +244,5 @@ def tuned_layout(g, k: Optional[int] = None, backend=None,
     geom = autotune(g, k=k, backend=backend, platform=platform,
                     cache_dir=cache_dir, force=force)
     return build_layout(g, k=k, edge_tile=geom.edge_tile,
-                        msg_tile=geom.msg_tile, **build_kw)
+                        msg_tile=geom.msg_tile, fold_tile=geom.fold_tile,
+                        **build_kw)

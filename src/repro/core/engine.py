@@ -138,9 +138,10 @@ class Engine:
         self.use_pallas = kset.any_pallas          # introspection compat
         self._gather_kernel = kset.gather
         self._scatter_kernel = kset.scatter
-        # SC-stream monoid fold + touched flags (compaction is
-        # data-dependent, so it always runs the registry's ref fold)
-        self._fold = kregistry.BACKENDS["ref"].segment_fold(program.monoid)
+        # SC-stream monoid fold + touched flags through registry kernel
+        # 'fold' (the blocked Pallas fold by default; budgets are static
+        # per compiled step, so the stream shape is known at trace time)
+        self._fold = kset.fold
         self._step_cache = {}                      # (bv, be) -> jitted step
 
     # ------------------------------------------------------------------

@@ -5,8 +5,11 @@ The BSP structure of the paper maps 1:1 onto collectives (DESIGN.md §2):
   Scatter (per device, local)   -> message buffer out[D, S] (DC) or
                                    ragged compaction (SC)
   barrier + bin exchange        -> all_to_all / ragged_all_to_all
-  Gather (per device, local)    -> segmented monoid fold over the statically
-                                   resident dc_bin adjacency
+  Gather (per device, local)    -> blocked segmented monoid fold over the
+                                   statically resident dc_bin adjacency
+                                   (registry kernel 'fold': the Pallas
+                                   kernel of repro.kernels.fold_block by
+                                   default — no jax.ops segment ops)
 
 DC mode sends *values only* (+1 validity byte, see DESIGN.md); SC mode sends
 (value, dst-id) pairs with wire bytes proportional to active edges.  Mode
@@ -36,12 +39,15 @@ def _squeeze0(tree):
     return jax.tree_util.tree_map(lambda a: a[0], tree)
 
 
-def _resolve_fold(program: VertexProgram, backend=None):
-    """Shard-local segmented fold through the backend registry (the Pallas
-    kernels have no shard_map-compatible lowering yet, so anything but
-    'ref' falls back with a warning)."""
+def _resolve_fold(program: VertexProgram, backend=None, tile=None):
+    """Shard-local segmented fold through the backend registry.
+
+    Defaults to the blocked Pallas fold (:mod:`repro.kernels.fold_block`)
+    — Mosaic on TPU, interpreted elsewhere — which traces cleanly inside
+    the shard_map step bodies; monoids outside the Pallas set (e.g. the
+    packed uint64 ``min_with_payload``) fall back to ``ref`` per call."""
     b = kregistry.resolve("fold", program.monoid, choice=backend)
-    return b.segment_fold(program.monoid), b.name
+    return b.segment_fold(program.monoid, tile=tile), b.name
 
 
 def build_dc_step(program: VertexProgram, meta: dict,
@@ -355,7 +361,8 @@ class DistEngine:
         self.mode = mode
         self.bw_ratio = bw_ratio
         self.axes = tuple(mesh.axis_names)
-        fold, self.backend_name = _resolve_fold(program, backend)
+        fold, self.backend_name = _resolve_fold(
+            program, backend, tile=getattr(sharded, "fold_tile", None))
         meta = dict(nv=sharded.nv, S=sharded.S, D=sharded.D,
                     cap_in=sharded.cap_in, cap_pair=sharded.cap_pair,
                     kpd=sharded.kpd, weighted=sharded.weighted)
@@ -392,18 +399,17 @@ class DistEngine:
             )(state, active, arrays, it, dc_mask)
         self._hy = jax.jit(hy_fn)
 
-        # per-(global)-partition stats for the Eq. 1 per-partition decision
+        # per-(global)-partition stats for the Eq. 1 per-partition decision;
+        # partitions are index-contiguous q-sized ranges, so the segment
+        # reduction is a plain reshape-sum (no segment ops anywhere here)
         k_glob = sharded.D * sharded.kpd
         q = sharded.nv // sharded.kpd
-        vpart = jnp.asarray(
-            (np.arange(sharded.D * sharded.nv) // q).astype(np.int32))
 
         @jax.jit
         def _part_stats(active):
             a32 = active.astype(jnp.int32)
-            counts = jax.ops.segment_sum(a32, vpart, num_segments=k_glob)
-            ea = jax.ops.segment_sum(a32 * self.deg, vpart,
-                                     num_segments=k_glob)
+            counts = a32.reshape(k_glob, q).sum(axis=1)
+            ea = (a32 * self.deg).reshape(k_glob, q).sum(axis=1)
             return counts, ea
         self._pstats = _part_stats
         from ..core.cost import CostModel

@@ -75,6 +75,7 @@ class Layout:
     # ---- per-edge-tile metadata (kernel blocking + predication) ----
     edge_tile: int
     msg_tile: int
+    fold_tile: int            # message-tile of the blocked segmented fold
     tile_src_part: np.ndarray  # int32[NT] source partition of each edge tile
     tile_dst_part: np.ndarray  # int32[NT] destination partition (non-decreasing)
     tile_first: np.ndarray     # bool[NT] first tile of its destination partition
@@ -138,23 +139,25 @@ def build_layout(g: Graph, k: Optional[int] = None,
                  q_mult: int = 8,
                  edge_tile: Optional[int] = None,
                  msg_tile: Optional[int] = None,
+                 fold_tile: Optional[int] = None,
                  cache_vertices: Optional[int] = None) -> Layout:
     """Build the partition-centric layout.
 
     ``k`` defaults to the paper's rule (§3.1), see :func:`resolve_k`.
 
-    ``edge_tile``/``msg_tile`` left unset resolve through the
+    ``edge_tile``/``msg_tile``/``fold_tile`` left unset resolve through the
     :mod:`repro.backend.tuning` cache: an ``autotune()`` sweep recorded for
     this platform/backend/graph family wins, otherwise the static defaults
-    (256/128) apply.
+    (256/128/256) apply.
     """
     n, m = g.n, g.m
     k = resolve_k(n, k, parallel_units, cache_vertices)
-    if edge_tile is None or msg_tile is None:
+    if edge_tile is None or msg_tile is None or fold_tile is None:
         from ..backend.tuning import resolve_geometry
         geom = resolve_geometry(n, m, k, weighted=g.weighted)
         edge_tile = geom.edge_tile if edge_tile is None else edge_tile
         msg_tile = geom.msg_tile if msg_tile is None else msg_tile
+        fold_tile = geom.fold_tile if fold_tile is None else fold_tile
     q = _pad_to(-(-n // k), q_mult)
     n_pad = k * q
 
@@ -265,7 +268,7 @@ def build_layout(g: Graph, k: Optional[int] = None,
         msg_slot=msg_slot, edge_dst=edge_dst,
         edge_src_local=edge_src_local, edge_dst_local=edge_dst_local,
         edge_valid=edge_valid, edge_w=edge_w, blk_off=blk_off,
-        edge_tile=edge_tile, msg_tile=msg_tile,
+        edge_tile=edge_tile, msg_tile=msg_tile, fold_tile=fold_tile,
         tile_src_part=tile_src_part, tile_dst_part=tile_dst_part,
         tile_first=tile_first, part_has_tiles=part_has_tiles,
         csr_indptr=csr_indptr, csr_indices=g.indices.astype(np.int32),

@@ -1,0 +1,146 @@
+"""Blocked segmented monoid fold — the Gather phase over a message stream.
+
+This is the shard_map-side realization of the paper's Gather loop (§3.2,
+Alg. 4): a device receives its bin column as one flat message stream
+``(vals, valid, ids)`` and folds it into a ``[num_segments]`` accumulator
+(``num_segments = nv + 1``: the device's vertices plus one overflow bin
+that absorbs sentinel ids).  The paper's claim that this runs lock- and
+atomic-free out of cache maps onto the kernel as:
+
+  * the grid walks fixed-size VMEM blocks of the message stream
+    (``fold_tile`` messages per step) — the bins are streamed sequentially,
+    never random-accessed;
+  * the accumulator block (``[1, num_segments_padded]``) stays resident in
+    VMEM across *all* grid steps (the output block index is constant), so
+    every partial combine is a register/VMEM operation — no scatter-add,
+    no ``jax.ops.segment_*``, no atomics anywhere in the lowering;
+  * block partials compose through the monoid because TPU grid steps
+    execute sequentially over a revisited output block (the same
+    accumulation contract :mod:`repro.kernels.segment_combine` relies on).
+
+Because the fold is a plain ``pallas_call`` over per-shard arrays (no
+collectives, no layout capture), it traces cleanly inside ``shard_map``
+bodies — this is the kernel behind registry entry ``fold``.
+
+All three monoids fold as masked VPU reduces over the one-hot block (an
+MXU one-hot matmul would be faster for float adds but turns a single
+non-finite message into NaN across every lane via inf*0, and truncates
+int32 payloads above 2**24 through the f32 round trip).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .segment_combine import _identity_val
+
+DEFAULT_FOLD_TILE = 256
+ENV_FOLD_TILE = "REPRO_FOLD_TILE"
+# The one-hot combine materializes a [fold_tile, num_segments_padded]
+# block per grid step, so compute and VMEM grow linearly in the segment
+# count: 256 x 4096 x 4B = 4 MB keeps the block (plus the resident
+# accumulator) inside a TPU core's ~16 MB VMEM.  Above the cap the
+# FoldKernel wrapper (repro.kernels.ops) falls back to the ref fold —
+# the paper's own regime anyway, since a partition's vertex data is
+# meant to fit the private cache.
+DEFAULT_FOLD_MAX_SEGMENTS = 4096
+ENV_FOLD_MAX_SEGMENTS = "REPRO_FOLD_MAX_SEGMENTS"
+_LANES = 128
+
+
+def default_fold_tile() -> int:
+    """Message-tile size for the blocked fold: the ``REPRO_FOLD_TILE``
+    override if set, else the static default (autotune sweeps pass an
+    explicit ``fold_tile`` instead)."""
+    env = os.environ.get(ENV_FOLD_TILE)
+    return int(env) if env else DEFAULT_FOLD_TILE
+
+
+def max_fold_segments() -> int:
+    """Largest segment count the blocked kernel will take on before the
+    FoldKernel wrapper falls back to the ref fold
+    (``REPRO_FOLD_MAX_SEGMENTS`` overrides the static default)."""
+    env = os.environ.get(ENV_FOLD_MAX_SEGMENTS)
+    return int(env) if env else DEFAULT_FOLD_MAX_SEGMENTS
+
+
+def _kernel(vals_ref, valid_ref, ids_ref,              # VMEM in (one block)
+            acc_ref, touched_ref,                      # VMEM out (resident)
+            *, monoid: str, nsp: int):
+    t = pl.program_id(0)
+    ident = _identity_val(monoid, acc_ref.dtype)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, ident)
+        touched_ref[...] = jnp.zeros_like(touched_ref)
+
+    vals = vals_ref[...]                                # [T]
+    valid = valid_ref[...] > 0                          # [T]
+    ids = ids_ref[...]                                  # [T]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (vals.shape[0], nsp), 1)
+    onehot = (ids[:, None] == cols) & valid[:, None]    # [T, nsp]
+    if monoid == "add":
+        # masked VPU sum, NOT a one-hot MXU matmul: inf*0 = NaN in a
+        # matmul would pollute every other segment's lane the moment one
+        # message diverges, where the ref fold confines it to its segment
+        masked = jnp.where(onehot, vals[:, None],
+                           jnp.zeros((), acc_ref.dtype))
+        contrib = jnp.sum(masked, axis=0)
+        acc_ref[...] = acc_ref[...] + contrib.astype(acc_ref.dtype)[None, :]
+    elif monoid == "min":
+        masked = jnp.where(onehot, vals[:, None], ident)
+        acc_ref[...] = jnp.minimum(acc_ref[...],
+                                   jnp.min(masked, axis=0)[None, :])
+    elif monoid == "max":
+        masked = jnp.where(onehot, vals[:, None], ident)
+        acc_ref[...] = jnp.maximum(acc_ref[...],
+                                   jnp.max(masked, axis=0)[None, :])
+    touched_ref[...] = jnp.maximum(
+        touched_ref[...],
+        jnp.max(onehot.astype(jnp.int32), axis=0)[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "monoid",
+                                             "fold_tile", "interpret"))
+def blocked_segment_fold(vals, valid, ids, num_segments: int, *,
+                         monoid: str = "add", fold_tile: int = 256,
+                         interpret: bool = True):
+    """Segmented monoid fold of a message stream, blocked through VMEM.
+
+    Args:
+      vals:  [N] message value per slot.
+      valid: [N] bool/int validity; invalid slots contribute nothing.
+      ids:   [N] int32 segment id per slot.  Ids outside
+             ``[0, num_segments)`` contribute nothing (the engines point
+             sentinel slots at the overflow bin ``num_segments - 1``).
+      num_segments: static segment count (engines pass ``nv + 1``).
+      fold_tile: messages per grid step (the VMEM block size).
+    Returns:
+      acc [num_segments] monoid fold, touched [num_segments] bool.
+    """
+    n = vals.shape[0]
+    nt = max(1, -(-n // fold_tile))
+    n_pad = nt * fold_tile
+    nsp = -(-num_segments // _LANES) * _LANES
+    ident = _identity_val(monoid, vals.dtype)
+    vals = jnp.pad(vals, (0, n_pad - n), constant_values=ident)
+    valid = jnp.pad(valid.astype(jnp.int32), (0, n_pad - n))
+    ids = jnp.pad(ids.astype(jnp.int32), (0, n_pad - n))
+    acc, touched = pl.pallas_call(
+        functools.partial(_kernel, monoid=monoid, nsp=nsp),
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((fold_tile,), lambda t: (t,)),
+                  pl.BlockSpec((fold_tile,), lambda t: (t,)),
+                  pl.BlockSpec((fold_tile,), lambda t: (t,))],
+        out_specs=[pl.BlockSpec((1, nsp), lambda t: (0, 0)),
+                   pl.BlockSpec((1, nsp), lambda t: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, nsp), vals.dtype),
+                   jax.ShapeDtypeStruct((1, nsp), jnp.int32)],
+        interpret=interpret,
+    )(vals, valid, ids)
+    return acc[0, :num_segments], touched[0, :num_segments] > 0

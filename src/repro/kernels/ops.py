@@ -21,6 +21,8 @@ import numpy as np
 
 from . import ref as kref
 from .dc_gather import dc_gather
+from .fold_block import (blocked_segment_fold, default_fold_tile,
+                         max_fold_segments)
 from .segment_combine import segment_combine, _identity_val
 from .spmv_block import spmv_block
 
@@ -109,6 +111,64 @@ class SpmvKernel:
         return jnp.where(self.has_tiles > 0, y, 0.0).reshape(-1)
 
 
+class FoldKernel:
+    """Blocked Pallas segmented fold with the registry's ``fold`` contract.
+
+    Layout-free (the segment count arrives per call): the distributed
+    engine folds each device's received bin column under ``shard_map``,
+    and the single-device engine folds the compacted SC stream.  The
+    message-tile size comes from the tuning sweep (``tile=``), the
+    ``REPRO_FOLD_TILE`` override, or the static default, in that order.
+    """
+
+    def __init__(self, monoid_name: str, dtype, interpret: bool = True,
+                 tile=None):
+        self.monoid = monoid_name
+        self.dtype = jnp.dtype(dtype)
+        self.interpret = interpret
+        self.tile = tile
+        self._ref_fold = None
+
+    def _ref(self):
+        if self._ref_fold is None:
+            from ..core.monoid import REGISTRY
+            self._ref_fold = RefFold(REGISTRY[self.monoid](self.dtype))
+        return self._ref_fold
+
+    def __call__(self, vals, valid, ids, num_segments):
+        # the one-hot combine is O(stream x segments) with the whole
+        # accumulator VMEM-resident; past the cap that stops being the
+        # paper's cache-resident regime, so run the ref fold instead
+        if int(num_segments) > max_fold_segments():
+            return self._ref()(vals, valid, ids, num_segments)
+        tile = int(self.tile) if self.tile else default_fold_tile()
+        return blocked_segment_fold(
+            vals, valid, ids, int(num_segments), monoid=self.monoid,
+            fold_tile=tile, interpret=self.interpret)
+
+
+class RefFold:
+    """Pure-jnp segmented fold with FoldKernel's exact call contract.
+
+    Tightened over a bare ``Monoid.segment_fold``: invalid slots are
+    masked to the identity *inside* the fold (callers need not pre-mask)
+    and ``touched`` reports exactly the segments a valid message reached —
+    the same semantics the blocked kernel realizes with its one-hot mask.
+    """
+
+    def __init__(self, monoid):
+        self.monoid = monoid
+
+    def __call__(self, vals, valid, ids, num_segments):
+        mono = self.monoid
+        valid = valid.astype(bool)
+        vals = jnp.where(valid, vals.astype(mono.dtype), mono.identity)
+        acc = mono.segment_fold(vals, ids, num_segments)
+        touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
+                                      num_segments=num_segments) > 0
+        return acc, touched
+
+
 class RefGather:
     """Pure-jnp gather fold with GatherKernel's exact call contract.
 
@@ -183,6 +243,7 @@ def make_kernels(layout, monoid, backend=None, platform=None,
                                  platform=platform, with_spmv=with_spmv)
 
 
-__all__ = ["GatherKernel", "ScatterKernel", "SpmvKernel",
-           "RefGather", "RefScatter", "RefSpmv", "make_kernels",
-           "segment_combine", "dc_gather", "spmv_block", "kref"]
+__all__ = ["GatherKernel", "ScatterKernel", "SpmvKernel", "FoldKernel",
+           "RefGather", "RefScatter", "RefSpmv", "RefFold", "make_kernels",
+           "segment_combine", "dc_gather", "spmv_block",
+           "blocked_segment_fold", "kref"]

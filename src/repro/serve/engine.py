@@ -342,12 +342,19 @@ class GraphQueryServer:
         custom = bool({"mode", "backend", "bw_ratio"} & p.keys())
         mode = p.pop("mode", self.mode)
         backend = p.pop("backend", self.backend)
+        bw_ratio = p.pop("bw_ratio", None)
         shared = {"bfs": (bfs, bfs_program), "sssp": (sssp, sssp_program),
                   "cc": (connected_components, cc_program)}
         if q.app in shared:
             app_fn, make_program = shared[q.app]
             if custom:
-                return app_fn(self.layout, mode=mode, backend=backend, **p)
+                # dedicated engine: not every app fn forwards bw_ratio
+                from ..core.engine import Engine
+                eng = Engine(self.layout, make_program(), mode=mode,
+                             backend=backend,
+                             **({"bw_ratio": bw_ratio}
+                                if bw_ratio is not None else {}))
+                return app_fn(self.layout, engine=eng, **p)
             return app_fn(self.layout, engine=self._shared_engine(
                 q.app, make_program), **p)
         if q.app == "pagerank":

@@ -87,6 +87,87 @@ def test_scatter_parity(layout, rng, backend, monoid, dtype):
                           np.asarray(ref(x, active)))
 
 
+@pytest.mark.parametrize("dtype", ["float32", "int32"])
+@pytest.mark.parametrize("monoid", ["add", "min", "max"])
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+def test_fold_parity(layout, rng, backend, monoid, dtype):
+    """The blocked segmented fold agrees bit-for-bit with the ref fold on
+    a realistic stream (the layout's gather-order edges, sentinel ids in
+    the overflow bin) at every backend."""
+    mono = MONOIDS[(monoid, dtype)]()
+    ns = layout.n_pad + 1
+    fold = registry.BACKENDS[backend].segment_fold(mono, tile=32)
+    ref = registry.BACKENDS["ref"].segment_fold(mono)
+    vals = _edge_vals(rng, layout, dtype)
+    valid = jnp.asarray(layout.edge_valid) \
+        & jnp.asarray(rng.random(layout.num_edges) < 0.7)
+    ids = jnp.where(valid, jnp.asarray(layout.edge_dst), ns - 1)
+    acc, touched = fold(vals, valid, ids, ns)
+    racc, rtouched = ref(vals, valid, ids, ns)
+    assert np.array_equal(np.asarray(touched), np.asarray(rtouched))
+    assert np.array_equal(np.asarray(acc), np.asarray(racc))
+
+
+def test_fold_default_is_pallas_on_cpu(monkeypatch):
+    """Acceptance: kernel 'fold' resolves to a Pallas-backed kernel by
+    default even on CPU hosts (interpret mode), while gather keeps ref.
+    'Default' means no override: neutralize the env var (the CI kernels
+    lane re-runs this module under both REPRO_KERNEL_BACKEND settings)."""
+    monkeypatch.delenv(registry.ENV_VAR, raising=False)
+    from repro.kernels.ops import FoldKernel
+    b = registry.resolve("fold", "add", platform="cpu")
+    assert b.name == "pallas-interpret"
+    assert isinstance(b.segment_fold("add"), FoldKernel)
+    assert registry.default_backend_name("cpu", kernel="fold") \
+        == "pallas-interpret"
+    assert registry.default_backend_name("cpu", kernel="gather") == "ref"
+    assert registry.default_backend_name("tpu", kernel="fold") \
+        == "pallas-native"
+
+
+def test_fold_tile_knob(layout, rng, monkeypatch):
+    """REPRO_FOLD_TILE steers the blocked fold's message tile; any valid
+    tile produces identical results."""
+    from repro.kernels import fold_block
+    monkeypatch.setenv(fold_block.ENV_FOLD_TILE, "16")
+    assert fold_block.default_fold_tile() == 16
+    mono = MONOIDS[("add", "float32")]()
+    fold = registry.BACKENDS["pallas-interpret"].segment_fold(mono)
+    assert fold.tile is None                # resolved per call, from env
+    ns = layout.n_pad + 1
+    vals = _edge_vals(rng, layout, "float32")
+    valid = jnp.asarray(layout.edge_valid)
+    ids = jnp.where(valid, jnp.asarray(layout.edge_dst), ns - 1)
+    acc16, _ = fold(vals, valid, ids, ns)
+    monkeypatch.delenv(fold_block.ENV_FOLD_TILE)
+    acc_def, _ = fold(vals, valid, ids, ns)
+    assert np.array_equal(np.asarray(acc16), np.asarray(acc_def))
+
+
+def test_fold_segment_cap_falls_back_to_ref(layout, rng, monkeypatch):
+    """Past REPRO_FOLD_MAX_SEGMENTS the one-hot combine leaves the
+    cache-resident regime; FoldKernel must switch to the ref fold (same
+    results, no Pallas call) instead of materializing a huge block."""
+    from repro.kernels import fold_block
+    mono = MONOIDS[("add", "float32")]()
+    fold = registry.BACKENDS["pallas-interpret"].segment_fold(mono)
+    ns = layout.n_pad + 1
+    vals = _edge_vals(rng, layout, "float32")
+    valid = jnp.asarray(layout.edge_valid)
+    ids = jnp.where(valid, jnp.asarray(layout.edge_dst), ns - 1)
+    want = fold(vals, valid, ids, ns)
+    monkeypatch.setenv(fold_block.ENV_FOLD_MAX_SEGMENTS, str(ns - 1))
+    assert fold_block.max_fold_segments() == ns - 1
+
+    def boom(*a, **kw):
+        raise AssertionError("blocked kernel ran past the segment cap")
+    import repro.kernels.ops as kops
+    monkeypatch.setattr(kops, "blocked_segment_fold", boom)
+    acc, touched = fold(vals, valid, ids, ns)
+    assert np.array_equal(np.asarray(acc), np.asarray(want[0]))
+    assert np.array_equal(np.asarray(touched), np.asarray(want[1]))
+
+
 @pytest.mark.parametrize("backend", PARITY_BACKENDS)
 def test_spmv_parity(layout, rng, backend):
     b = registry.BACKENDS[backend]
@@ -146,7 +227,8 @@ def test_env_override_selects_backend(monkeypatch):
 def test_env_override_end_to_end(layout, monkeypatch, env):
     monkeypatch.setenv(registry.ENV_VAR, env)
     eng = Engine(layout, bfs_program())
-    assert eng.backend_names == {"gather": env, "scatter": env}
+    assert eng.backend_names == {"gather": env, "scatter": env,
+                                 "fold": env}
     res = bfs(layout, source=3, engine=eng)
     ref = bfs(layout, source=3, backend="ref")
     assert np.array_equal(res["level"], ref["level"])
@@ -178,7 +260,13 @@ def test_supported_matrix():
         == {"ref", "pallas-interpret"}
     assert set(registry.supported("tpu", "gather", "add", jnp.float32)) \
         == {"ref", "pallas-interpret", "pallas-native"}
-    assert registry.supported("cpu", "fold", "add", jnp.float32) == ("ref",)
+    assert set(registry.supported("cpu", "fold", "add", jnp.float32)) \
+        == {"ref", "pallas-interpret"}
+    assert set(registry.supported("tpu", "fold", "min", jnp.uint32)) \
+        == {"ref", "pallas-interpret", "pallas-native"}
+    # packed uint64 folds stay ref-only (no 8-byte Pallas lowering)
+    assert registry.supported("cpu", "fold", "min_with_payload",
+                              jnp.uint64) == ("ref",)
     # spmv is an add/float kernel on every backend
     assert registry.supported("cpu", "spmv", "min", jnp.float32) == ()
 
@@ -276,6 +364,40 @@ def test_graph_query_server_per_query_overrides(layout):
     assert done[2].result["label"] is not None
 
 
+def test_check_bench_regression(tmp_path):
+    import importlib.util
+    path = Path(__file__).resolve().parents[1] / "tools" \
+        / "check_bench_regression.py"
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+    kernels = ("gather", "scatter", "spmv", "fold")
+
+    def doc(walls):
+        return {"results": [
+            {"kernel": k, "backend": "ref", "monoid": "add", "scale": 6,
+             "wall_s": w} for k, w in zip(kernels, walls)]}
+    flat = doc([0.010] * 4)
+    assert mod.check(flat, flat, 2.0, 0.005) == 0
+    # one kernel 3x while the rest hold: a real regression
+    assert mod.check(doc([0.030, 0.010, 0.010, 0.010]), flat,
+                     2.0, 0.005) == 1
+    # half the kernels ~4x: the healthy rows must outvote them (a median
+    # calibration would forgive this as 'machine speed')
+    assert mod.check(doc([0.039, 0.039, 0.010, 0.010]), flat,
+                     2.0, 0.005) == 1
+    # a uniformly 2.5x slower runner is machine speed, not a regression
+    assert mod.check(doc([0.025] * 4), flat, 2.0, 0.005) == 0
+    # ... but a uniform slowdown beyond the calibration clamp still fails
+    assert mod.check(doc([0.080] * 4), flat, 2.0, 0.005) == 1
+    # sub-floor rows are dispatch jitter and never flag
+    assert mod.check(doc([0.004] * 4), doc([0.001] * 4), 2.0, 0.005) == 0
+    other = {"results": [{"kernel": "spmv", "backend": "ref",
+                          "monoid": "add", "scale": 8, "wall_s": 1.0}]}
+    assert mod.check(flat, other, 2.0, 0.005) == 2              # no overlap
+
+
 def test_bench_kernels_smoke(tmp_path):
     sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
     try:
@@ -289,6 +411,7 @@ def test_bench_kernels_smoke(tmp_path):
     assert disk == doc
     assert disk["meta"]["platform"] == jax.default_backend()
     rows = disk["results"]
-    assert {r["kernel"] for r in rows} == {"gather", "scatter", "spmv"}
+    assert {r["kernel"] for r in rows} == {"gather", "scatter", "spmv",
+                                           "fold"}
     assert {r["backend"] for r in rows} == {"ref", "pallas-interpret"}
     assert all(r["wall_s"] > 0 for r in rows)

@@ -27,7 +27,7 @@ import jax, numpy as np, jax.numpy as jnp
 from repro.dist.compat import AxisType, make_mesh
 from repro.graph import rmat, build_layout, to_scipy
 from repro.graph.shard import shard_layout
-from repro.core.dist_engine import DistEngine
+from repro.dist.engine import DistEngine
 import scipy.sparse.csgraph as csg
 D = 8
 mesh = make_mesh((D,), ("dev",), axis_types=(AxisType.Auto,))
@@ -49,6 +49,12 @@ level = np.full(N, -1, np.int32); level[src] = 0
 vid = np.arange(N, dtype=np.uint32)
 frontier = np.zeros(N, bool); frontier[src] = True
 eng = DistEngine(SL, prog, mesh, mode="hybrid")
+# the CI dist lane pins the fold backend via REPRO_KERNEL_BACKEND; the
+# engine must honour it (BFS's min/uint32 monoid lowers on every backend)
+import os
+want = os.environ.get("REPRO_KERNEL_BACKEND")
+if want:
+    assert eng.backend_name == want, eng.backend_name
 state, _, stats = eng.run({"parent": parent, "level": level, "vid": vid},
                           frontier)
 lv = np.asarray(state["level"])[:g.n]

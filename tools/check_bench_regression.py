@@ -1,0 +1,107 @@
+"""Fail CI when a kernel microbenchmark regresses against the baseline.
+
+  python tools/check_bench_regression.py --fresh /tmp/BENCH_fresh.json \
+      [--baseline BENCH_kernels.json] [--threshold 2.0] [--min-wall 0.005]
+
+Rows are matched on ``(kernel, backend, monoid, scale)``.  A row fails
+when its fresh wall time exceeds ``threshold``× the baseline's *after
+machine calibration*.  Three guards keep the check meaningful when the
+baseline was committed from a different machine than the CI runner:
+
+  * machine calibration: the 25th-percentile fresh/baseline ratio over
+    the matched rows above the noise floor estimates how much slower the
+    runner is than the baseline host, and baselines are scaled by it
+    before the threshold test.  A low percentile (not the median) so
+    that only a near-uniform shift — machine speed — calibrates away,
+    while a subset of regressed kernels cannot outvote the healthy ones.
+    The factor is clamped to [1, ``--max-calibration``]: it can forgive
+    a slower runner, never a uniformly *regressed* tree (a global
+    slowdown beyond the clamp still fails), and never tightens the
+    bound on a faster runner;
+  * rows whose fresh time is under ``--min-wall`` seconds are skipped —
+    micro-times in the hundreds of microseconds are dispatch jitter, not
+    kernel work;
+  * the calibrated baseline is floored at ``--min-wall`` before the
+    ratio, so a lucky sub-millisecond baseline cannot flag an equally
+    trivial fresh row.
+
+Zero overlapping rows is itself a failure: it means the bench schema or
+the baseline rotted and the guard is no longer guarding anything.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def row_key(r: dict) -> tuple:
+    return (r["kernel"], r["backend"], r.get("monoid", "add"),
+            r.get("scale"))
+
+
+def check(fresh: dict, baseline: dict, threshold: float, min_wall: float,
+          max_calibration: float = 3.0) -> int:
+    base = {row_key(r): r["wall_s"] for r in baseline["results"]}
+    matched = [(row_key(r), r["wall_s"], base[row_key(r)])
+               for r in fresh["results"] if row_key(r) in base]
+    if not matched:
+        print("error: no rows of the fresh run match the baseline — "
+              "regenerate the committed BENCH_kernels.json")
+        return 2
+    # calibrate on rows big enough to time reliably; sub-floor rows are
+    # dispatch jitter and would let a lucky vote mask real regressions.
+    # Take a LOW percentile, not the median: machine speed shifts every
+    # row, a regression shifts only some — a median would forgive up to
+    # half the rows regressing threshold x clamp at once
+    votes = sorted(fw / bw for _, fw, bw in matched
+                   if bw > 0 and fw >= min_wall) \
+        or sorted(fw / bw for _, fw, bw in matched if bw > 0)
+    factor = min(max(votes[len(votes) // 4], 1.0), max_calibration)
+    print(f"machine calibration factor: {factor:.2f}x "
+          f"(clamped to [1, {max_calibration}])")
+    regressed = 0
+    for key, fw, bw in matched:
+        if fw < min_wall:
+            print(f"  skip {key}: fresh {fw*1e3:.3f}ms < "
+                  f"{min_wall*1e3:.1f}ms floor")
+            continue
+        ratio = fw / max(bw * factor, min_wall)
+        tag = "REGRESSED" if ratio > threshold else "ok"
+        print(f"  {tag} {key}: {bw*1e3:.3f}ms -> {fw*1e3:.3f}ms "
+              f"({ratio:.2f}x calibrated)")
+        if ratio > threshold:
+            regressed += 1
+    if regressed:
+        print(f"{regressed} kernel timing(s) regressed more than "
+              f"{threshold}x")
+        return 1
+    print(f"all {len(matched)} matched rows within {threshold}x of the "
+          "calibrated baseline")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated BENCH_kernels.json")
+    ap.add_argument("--baseline",
+                    default=str(REPO_ROOT / "BENCH_kernels.json"),
+                    help="committed baseline (default: repo root)")
+    ap.add_argument("--threshold", type=float, default=2.0)
+    ap.add_argument("--min-wall", type=float, default=0.005,
+                    help="seconds below which rows are noise, not signal")
+    ap.add_argument("--max-calibration", type=float, default=3.0,
+                    help="max machine-speed difference forgiven")
+    args = ap.parse_args()
+    fresh = json.loads(Path(args.fresh).read_text())
+    baseline = json.loads(Path(args.baseline).read_text())
+    sys.exit(check(fresh, baseline, args.threshold, args.min_wall,
+                   args.max_calibration))
+
+
+if __name__ == "__main__":
+    main()
