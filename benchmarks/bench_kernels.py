@@ -5,11 +5,13 @@
       [--out BENCH_kernels.json]
 
 Times one compiled call of each of ``gather`` (segment_combine), ``scatter``
-(dc_gather), ``spmv`` (spmv_block) and ``fold`` (fold_block — the blocked
-segmented fold behind the distributed gather) for every backend the registry
-can lower on this platform, across rmat graph scales, and writes the results
-to ``BENCH_kernels.json`` at the repo root — the perf-trajectory artifact
-every hot-path PR regenerates.  ``--smoke`` (used by CI) runs two small
+(dc_gather), ``spmv`` (spmv_block), ``fold`` (fold_block — the blocked
+segmented fold behind the distributed gather) and ``fold2`` (fold_two_level
+— the same fold on an over-cap segment count, where the two-level bucketed
+kernel runs) for every backend the registry can lower on this platform,
+across rmat graph scales, and writes the results to ``BENCH_kernels.json``
+at the repo root — the perf-trajectory artifact every hot-path PR
+regenerates.  ``--smoke`` (used by CI) runs two small
 scales at best-of-2 so the emission path can never silently rot; CI
 compares the smoke rows against the committed baseline with
 ``tools/check_bench_regression.py``.
@@ -28,7 +30,7 @@ from repro.backend import registry, tuning
 from repro.graph import build_layout, rmat
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
-KERNELS = ("gather", "scatter", "spmv", "fold")
+KERNELS = ("gather", "scatter", "spmv", "fold", "fold2")
 
 
 def bench_backend(layout, backend_name: str, platform: str, reps: int):
@@ -37,15 +39,18 @@ def bench_backend(layout, backend_name: str, platform: str, reps: int):
     rows = []
     for kernel in KERNELS:
         monoid = "add"
-        resolved = registry.resolve(kernel, monoid, platform=platform,
-                                    choice=backend_name)
+        # fold2 is the registry 'fold' kernel timed in the over-cap
+        # (two-level) regime, not a separate registry entry
+        resolved = registry.resolve(
+            "fold" if kernel.startswith("fold") else kernel, monoid,
+            platform=platform, choice=backend_name)
         if resolved.name != backend_name:
             continue                 # would silently time the fallback
         t = tuning.time_layout(layout, backend_name, platform,
                                kernels=(kernel,), reps=reps,
                                monoid=monoid)
         if kernel not in t:
-            continue     # e.g. fold past the segment cap: ref would run
+            continue
         rows.append({"kernel": kernel, "monoid": monoid,
                      "backend": backend_name, "wall_s": t[kernel]})
     return rows
@@ -64,7 +69,8 @@ def run(scales, backends, reps: int, k: int, out_path: Path) -> dict:
                          k=int(layout.k), q=int(layout.q),
                          edge_tile=int(layout.edge_tile),
                          msg_tile=int(layout.msg_tile),
-                         fold_tile=int(layout.fold_tile))
+                         fold_tile=int(layout.fold_tile),
+                         fold_q=int(layout.fold_q))
                 results.append(r)
             print(f"scale={scale} backend={backend_name}: "
                   + (", ".join(f"{r['kernel']}={r['wall_s']*1e3:.3f}ms"

@@ -34,8 +34,8 @@ partition-sizing rule) is swept empirically by
 Kernel ``fold`` — the blocked segmented fold
 --------------------------------------------
 
-``resolve("fold", monoid).segment_fold(monoid, tile=None)`` returns a
-callable with the contract::
+``resolve("fold", monoid).segment_fold(monoid, tile=None, q=None)``
+returns a callable with the contract::
 
     acc, touched = fold(vals, valid, ids, num_segments)
 
@@ -62,12 +62,22 @@ variable, then the static default
 (:data:`repro.kernels.fold_block.DEFAULT_FOLD_TILE`).  ``autotune()``
 sweeps it jointly with ``edge_tile``/``msg_tile``.
 
-The blocked combine is O(stream × segments) with the whole accumulator
+The flat blocked combine keeps the whole ``[num_segments]`` accumulator
 VMEM-resident, so past ``REPRO_FOLD_MAX_SEGMENTS`` segments (default
 4096 — the point where one grid step's one-hot block outgrows a TPU
-core's VMEM) the kernel transparently runs the ref fold instead: huge
-per-device vertex counts are outside the paper's cache-resident regime
-by definition.
+core's VMEM) the kernel switches to the *two-level* blocked fold
+(:mod:`repro.kernels.fold_two_level`): segments are grouped into coarse
+buckets of ``q`` (the ``q=`` argument — engines pass the layout's tuned
+``fold_q`` — then ``REPRO_FOLD_Q``, then
+:data:`repro.kernels.fold_two_level.DEFAULT_FOLD_Q`), each bucket's
+``[q]``-sized sub-accumulator folds VMEM-resident over the message
+stream with a ``[fold_tile, q]`` one-hot, and per-tile bucket-range
+predication skips off-bucket tiles (destination-sorted streams — the
+engines' dc_bin order — do ~no redundant work).  Both regimes are
+Pallas lowerings with identical semantics; there is no silent handoff
+to ``ref`` at any segment count — ``REPRO_KERNEL_BACKEND=ref`` is the
+only way to get the ``jax.ops`` fold.  ``autotune()`` sweeps ``fold_q``
+jointly with ``fold_tile`` via the over-cap ``fold2`` timing row.
 """
 from __future__ import annotations
 

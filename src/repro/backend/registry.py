@@ -19,10 +19,12 @@ with a warning instead of failing — the rest of the engine keeps its
 chosen backend.
 
 Kernel ``fold`` (the shard_map-side blocked segmented fold,
-:mod:`repro.kernels.fold_block`) is the one kernel whose *platform
-default* is Pallas everywhere: ``pallas-native`` on TPU and
-``pallas-interpret`` on other hosts, so the distributed gather runs the
-paper's blocked VMEM fold — never ``jax.ops`` scatter-adds — unless
+:mod:`repro.kernels.fold_block` below ``REPRO_FOLD_MAX_SEGMENTS``
+segments, the two-level :mod:`repro.kernels.fold_two_level` above it) is
+the one kernel whose *platform default* is Pallas everywhere:
+``pallas-native`` on TPU and ``pallas-interpret`` on other hosts, so the
+distributed gather runs the paper's blocked VMEM fold at every segment
+count — never ``jax.ops`` scatter-adds — unless
 ``REPRO_KERNEL_BACKEND=ref`` explicitly opts out.
 """
 from __future__ import annotations
@@ -65,7 +67,7 @@ class KernelBackend(Protocol):
 
     def spmv(self, layout, weighted=None) -> Any: ...
 
-    def segment_fold(self, monoid, tile=None) -> Any: ...
+    def segment_fold(self, monoid, tile=None, q=None) -> Any: ...
 
 
 class RefBackend:
@@ -88,7 +90,7 @@ class RefBackend:
     def spmv(self, layout, weighted=None):
         return kops.RefSpmv(layout, weighted=weighted)
 
-    def segment_fold(self, monoid, tile=None):
+    def segment_fold(self, monoid, tile=None, q=None):
         return kops.RefFold(_monoid_obj(monoid))
 
 
@@ -124,10 +126,10 @@ class PallasBackend:
         return kops.SpmvKernel(layout, interpret=self.interpret,
                                weighted=weighted)
 
-    def segment_fold(self, monoid, tile=None):
+    def segment_fold(self, monoid, tile=None, q=None):
         mono = _monoid_obj(monoid)
         return kops.FoldKernel(mono.name, mono.dtype,
-                               interpret=self.interpret, tile=tile)
+                               interpret=self.interpret, tile=tile, q=q)
 
 
 BACKENDS: dict[str, KernelBackend] = {
@@ -246,5 +248,7 @@ def make_kernels(layout, monoid, backend=None, platform=None,
                      scatter=sb.scatter(layout, mono),
                      fold=fb.segment_fold(mono,
                                           tile=getattr(layout, "fold_tile",
-                                                       None)),
+                                                       None),
+                                          q=getattr(layout, "fold_q",
+                                                    None)),
                      spmv=spmv, names=names)

@@ -1,4 +1,5 @@
-"""Tile-geometry autotuner: sweep ``edge_tile``/``msg_tile``/``fold_tile``.
+"""Tile-geometry autotuner: sweep ``edge_tile``/``msg_tile``/``fold_tile``
+(and the two-level fold's bucket width ``fold_q``).
 
 The paper's §3.1 sizing rule ("one partition's vertex data fits the private
 cache") fixes ``q``; what it leaves open — and what §6.4 shows matters — is
@@ -17,6 +18,14 @@ Eq. 1's cost model prices the gather traffic as a function of both the
 bin-stream granularity and the per-partition accumulator residency, so
 the best fold tile shifts with ``edge_tile`` (a bigger edge tile raises
 the message density per bin column and favours a bigger fold block).
+
+``fold_q`` — the bucket width of the two-level fold
+(:mod:`repro.kernels.fold_two_level`, the over-cap regime) — is swept
+jointly with ``fold_tile``: the two-level one-hot block is
+``[fold_tile, fold_q]``, so the same Eq. 1 trade (block size vs number of
+grid revisits) couples the two knobs.  The ``fold2`` kernel row times the
+two-level path on an over-cap synthetic stream so the sweep can actually
+observe ``fold_q`` (below the cap the registry fold never runs it).
 
 Cache entries are keyed by (platform, backend, log2-bucketed graph size,
 partition count): geometry is a property of the memory hierarchy and the
@@ -43,6 +52,7 @@ class TileGeometry:
     edge_tile: int = 256
     msg_tile: int = 128
     fold_tile: int = 256
+    fold_q: int = 256         # two-level fold bucket width (over-cap regime)
 
 
 DEFAULT_GEOMETRY = TileGeometry()
@@ -52,14 +62,21 @@ DEFAULT_GEOMETRY = TileGeometry()
 # lane-aligned multiples of 128 going up to the VMEM budget.  fold_tile
 # moves with edge_tile (denser bin columns favour bigger fold blocks) and
 # each edge_tile point carries two fold_tile points so the joint optimum
-# is observable rather than assumed.
+# is observable rather than assumed; fold_q moves with fold_tile (the
+# two-level one-hot block is [fold_tile, fold_q], so the VMEM budget
+# couples them) with two fold_q points per fold_tile point.
 CANDIDATES = {
-    "cpu": (TileGeometry(64, 32, 64), TileGeometry(128, 64, 128),
-            TileGeometry(128, 64, 256), TileGeometry(256, 128, 256),
-            TileGeometry(256, 128, 512), TileGeometry(512, 256, 512)),
-    "tpu": (TileGeometry(256, 128, 256), TileGeometry(512, 256, 512),
-            TileGeometry(512, 256, 1024), TileGeometry(1024, 512, 1024),
-            TileGeometry(1024, 512, 2048), TileGeometry(2048, 1024, 2048)),
+    "cpu": (TileGeometry(64, 32, 64, 64), TileGeometry(128, 64, 128, 128),
+            TileGeometry(128, 64, 256, 128),
+            TileGeometry(256, 128, 256, 256),
+            TileGeometry(256, 128, 512, 256),
+            TileGeometry(512, 256, 512, 512)),
+    "tpu": (TileGeometry(256, 128, 256, 128),
+            TileGeometry(512, 256, 512, 256),
+            TileGeometry(512, 256, 1024, 256),
+            TileGeometry(1024, 512, 1024, 512),
+            TileGeometry(1024, 512, 2048, 512),
+            TileGeometry(2048, 1024, 2048, 1024)),
 }
 
 ENV_DIR = "REPRO_TUNING_DIR"
@@ -93,9 +110,11 @@ def load_cached(n, m, k, weighted, platform, backend,
         return None
     try:
         rec = json.loads(path.read_text())
+        # a cache entry predating a knob was swept without it: treat it as
+        # a miss so autotune() re-sweeps instead of pinning the new knob
+        # to its untuned default forever
         return TileGeometry(int(rec["edge_tile"]), int(rec["msg_tile"]),
-                            int(rec.get("fold_tile",
-                                        DEFAULT_GEOMETRY.fold_tile)))
+                            int(rec["fold_tile"]), int(rec["fold_q"]))
     except (ValueError, KeyError):
         return None
 
@@ -124,7 +143,8 @@ def _timed(fn, reps: int) -> float:
 
 
 def time_layout(layout, backend_name: str, platform: str,
-                kernels=("gather", "scatter", "spmv", "fold"), reps: int = 3,
+                kernels=("gather", "scatter", "spmv", "fold", "fold2"),
+                reps: int = 3,
                 monoid: str = "add", fold_backend=None) -> dict:
     """Time one compiled call of each kernel on a built layout.
 
@@ -160,29 +180,41 @@ def time_layout(layout, backend_name: str, platform: str,
         vk = jax.jit(b.spmv(layout).__call__)
         x = jnp.asarray(rng.integers(0, 64, layout.n_pad).astype(np.float32))
         out["spmv"] = _timed(lambda: vk(x), reps)
-    if "fold" in kernels:
-        # the layout's gather-order edge stream doubles as a realistic
-        # message stream: ids = edge destinations, overflow bin = n_pad
-        from ..kernels.fold_block import max_fold_segments
+    def _time_fold(key: str, ns: int, ids_np):
         b = registry.resolve("fold", monoid, dtype=dtype, platform=platform,
                              choice=fold_backend or backend_name)
-        ns = layout.n_pad + 1
-        if b.name.startswith("pallas") and ns > max_fold_segments():
-            return out      # FoldKernel would run ref: don't mislabel a row
         fold = b.segment_fold(monoid, tile=getattr(layout, "fold_tile",
-                                                   None))
+                                                   None),
+                              q=getattr(layout, "fold_q", None))
         fv = jnp.asarray(
             rng.integers(0, 64, layout.num_edges).astype(np.float32))
         fvalid = jnp.asarray(layout.edge_valid)
-        fids = jnp.where(fvalid, jnp.asarray(layout.edge_dst), ns - 1)
+        fids = jnp.where(fvalid, jnp.asarray(ids_np), ns - 1)
         fk = jax.jit(lambda v, va, i: fold(v, va, i, ns))
-        out["fold"] = _timed(lambda: fk(fv, fvalid, fids), reps)
+        out[key] = _timed(lambda: fk(fv, fvalid, fids), reps)
+
+    if "fold" in kernels:
+        # the layout's gather-order edge stream doubles as a realistic
+        # message stream: ids = edge destinations, overflow bin = n_pad
+        _time_fold("fold", layout.n_pad + 1, layout.edge_dst)
+    if "fold2" in kernels:
+        # the over-cap regime: a synthetic stream with num_segments past
+        # REPRO_FOLD_MAX_SEGMENTS, so the two-level fold (and its fold_q
+        # knob) is what actually gets timed; sorted ids model the engines'
+        # destination-major dc_bin order — the regime where the two-level
+        # bucket-range skip earns its keep
+        from ..kernels.fold_block import max_fold_segments
+        ns2 = max_fold_segments() + max_fold_segments() // 2 + 1
+        _time_fold("fold2", ns2,
+                   np.sort(rng.integers(0, ns2 - 1, layout.num_edges))
+                   .astype(np.int32))
     return out
 
 
 def autotune(g, k: Optional[int] = None, backend=None,
              platform: Optional[str] = None,
-             kernels=("gather", "scatter", "spmv", "fold"), reps: int = 3,
+             kernels=("gather", "scatter", "spmv", "fold", "fold2"),
+             reps: int = 3,
              cache_dir=None, force: bool = False) -> TileGeometry:
     """Sweep candidate tile geometries for graph ``g``; cache the winner.
 
@@ -210,17 +242,19 @@ def autotune(g, k: Optional[int] = None, backend=None,
     for geom in candidates(platform):
         L = build_layout(g, k=k, edge_tile=geom.edge_tile,
                          msg_tile=geom.msg_tile,
-                         fold_tile=geom.fold_tile)
+                         fold_tile=geom.fold_tile,
+                         fold_q=geom.fold_q)
         times = time_layout(L, bname, platform, kernels=kernels, reps=reps,
                             fold_backend=fold_bname)
         sweeps.append({"edge_tile": geom.edge_tile,
                        "msg_tile": geom.msg_tile,
                        "fold_tile": geom.fold_tile,
+                       "fold_q": geom.fold_q,
                        "wall_s": sum(times.values()), "kernels": times})
     best = min(sweeps, key=lambda s: s["wall_s"])
     rec = {
         "edge_tile": best["edge_tile"], "msg_tile": best["msg_tile"],
-        "fold_tile": best["fold_tile"],
+        "fold_tile": best["fold_tile"], "fold_q": best["fold_q"],
         "platform": platform, "backend": bname,
         "graph": {"n": int(g.n), "m": int(g.m), "k": int(kk),
                   "weighted": bool(g.weighted)},
@@ -232,7 +266,7 @@ def autotune(g, k: Optional[int] = None, backend=None,
     key = _cache_key(g.n, g.m, kk, g.weighted, platform, bname)
     (cdir / f"{key}.json").write_text(json.dumps(rec, indent=2))
     return TileGeometry(best["edge_tile"], best["msg_tile"],
-                        best["fold_tile"])
+                        best["fold_tile"], best["fold_q"])
 
 
 def tuned_layout(g, k: Optional[int] = None, backend=None,
@@ -245,4 +279,4 @@ def tuned_layout(g, k: Optional[int] = None, backend=None,
                     cache_dir=cache_dir, force=force)
     return build_layout(g, k=k, edge_tile=geom.edge_tile,
                         msg_tile=geom.msg_tile, fold_tile=geom.fold_tile,
-                        **build_kw)
+                        fold_q=geom.fold_q, **build_kw)

@@ -139,8 +139,10 @@ class Engine:
         self._gather_kernel = kset.gather
         self._scatter_kernel = kset.scatter
         # SC-stream monoid fold + touched flags through registry kernel
-        # 'fold' (the blocked Pallas fold by default; budgets are static
-        # per compiled step, so the stream shape is known at trace time)
+        # 'fold' (the blocked Pallas fold by default — flat below
+        # REPRO_FOLD_MAX_SEGMENTS, two-level above, both carrying the
+        # layout's tuned fold_tile/fold_q; budgets are static per
+        # compiled step, so the stream shape is known at trace time)
         self._fold = kset.fold
         self._step_cache = {}                      # (bv, be) -> jitted step
 

@@ -39,15 +39,18 @@ def _squeeze0(tree):
     return jax.tree_util.tree_map(lambda a: a[0], tree)
 
 
-def _resolve_fold(program: VertexProgram, backend=None, tile=None):
+def _resolve_fold(program: VertexProgram, backend=None, tile=None, q=None):
     """Shard-local segmented fold through the backend registry.
 
-    Defaults to the blocked Pallas fold (:mod:`repro.kernels.fold_block`)
-    — Mosaic on TPU, interpreted elsewhere — which traces cleanly inside
-    the shard_map step bodies; monoids outside the Pallas set (e.g. the
-    packed uint64 ``min_with_payload``) fall back to ``ref`` per call."""
+    Defaults to the blocked Pallas fold — Mosaic on TPU, interpreted
+    elsewhere; :mod:`repro.kernels.fold_block` up to
+    ``REPRO_FOLD_MAX_SEGMENTS`` per-device segments and the two-level
+    :mod:`repro.kernels.fold_two_level` (bucket width ``q``) beyond —
+    which traces cleanly inside the shard_map step bodies; monoids
+    outside the Pallas set (e.g. the packed uint64 ``min_with_payload``)
+    fall back to ``ref`` per call."""
     b = kregistry.resolve("fold", program.monoid, choice=backend)
-    return b.segment_fold(program.monoid, tile=tile), b.name
+    return b.segment_fold(program.monoid, tile=tile, q=q), b.name
 
 
 def build_dc_step(program: VertexProgram, meta: dict,
@@ -362,7 +365,8 @@ class DistEngine:
         self.bw_ratio = bw_ratio
         self.axes = tuple(mesh.axis_names)
         fold, self.backend_name = _resolve_fold(
-            program, backend, tile=getattr(sharded, "fold_tile", None))
+            program, backend, tile=getattr(sharded, "fold_tile", None),
+            q=getattr(sharded, "fold_q", None))
         meta = dict(nv=sharded.nv, S=sharded.S, D=sharded.D,
                     cap_in=sharded.cap_in, cap_pair=sharded.cap_pair,
                     kpd=sharded.kpd, weighted=sharded.weighted)

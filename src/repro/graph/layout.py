@@ -76,6 +76,7 @@ class Layout:
     edge_tile: int
     msg_tile: int
     fold_tile: int            # message-tile of the blocked segmented fold
+    fold_q: int               # bucket width of the two-level (over-cap) fold
     tile_src_part: np.ndarray  # int32[NT] source partition of each edge tile
     tile_dst_part: np.ndarray  # int32[NT] destination partition (non-decreasing)
     tile_first: np.ndarray     # bool[NT] first tile of its destination partition
@@ -140,24 +141,41 @@ def build_layout(g: Graph, k: Optional[int] = None,
                  edge_tile: Optional[int] = None,
                  msg_tile: Optional[int] = None,
                  fold_tile: Optional[int] = None,
+                 fold_q: Optional[int] = None,
                  cache_vertices: Optional[int] = None) -> Layout:
     """Build the partition-centric layout.
 
     ``k`` defaults to the paper's rule (§3.1), see :func:`resolve_k`.
 
-    ``edge_tile``/``msg_tile``/``fold_tile`` left unset resolve through the
-    :mod:`repro.backend.tuning` cache: an ``autotune()`` sweep recorded for
-    this platform/backend/graph family wins, otherwise the static defaults
-    (256/128/256) apply.
+    ``edge_tile``/``msg_tile``/``fold_tile``/``fold_q`` left unset resolve
+    through the :mod:`repro.backend.tuning` cache: an ``autotune()`` sweep
+    recorded for this platform/backend/graph family wins, otherwise the
+    static defaults (256/128/256/256) apply.  ``fold_q`` additionally
+    honours the ``REPRO_FOLD_Q`` environment knob when no sweep covers
+    this family.
     """
     n, m = g.n, g.m
     k = resolve_k(n, k, parallel_units, cache_vertices)
-    if edge_tile is None or msg_tile is None or fold_tile is None:
+    if edge_tile is None or msg_tile is None or fold_tile is None \
+            or fold_q is None:
+        import os
+
         from ..backend.tuning import resolve_geometry
+        from ..kernels.fold_block import ENV_FOLD_TILE, default_fold_tile
+        from ..kernels.fold_two_level import ENV_FOLD_Q, default_fold_q
         geom = resolve_geometry(n, m, k, weighted=g.weighted)
         edge_tile = geom.edge_tile if edge_tile is None else edge_tile
         msg_tile = geom.msg_tile if msg_tile is None else msg_tile
-        fold_tile = geom.fold_tile if fold_tile is None else fold_tile
+        # the REPRO_FOLD_TILE / REPRO_FOLD_Q knobs outrank the tuned or
+        # static geometry so an operator can steer deployed layouts
+        # without a re-sweep (engines always pass the layout's values to
+        # FoldKernel, so this is where the env must be honoured)
+        if fold_tile is None:
+            fold_tile = (default_fold_tile() if os.environ.get(ENV_FOLD_TILE)
+                         else geom.fold_tile)
+        if fold_q is None:
+            fold_q = (default_fold_q() if os.environ.get(ENV_FOLD_Q)
+                      else geom.fold_q)
     q = _pad_to(-(-n // k), q_mult)
     n_pad = k * q
 
@@ -269,6 +287,7 @@ def build_layout(g: Graph, k: Optional[int] = None,
         edge_src_local=edge_src_local, edge_dst_local=edge_dst_local,
         edge_valid=edge_valid, edge_w=edge_w, blk_off=blk_off,
         edge_tile=edge_tile, msg_tile=msg_tile, fold_tile=fold_tile,
+        fold_q=fold_q,
         tile_src_part=tile_src_part, tile_dst_part=tile_dst_part,
         tile_first=tile_first, part_has_tiles=part_has_tiles,
         csr_indptr=csr_indptr, csr_indices=g.indices.astype(np.int32),

@@ -37,6 +37,7 @@ class ShardedLayout:
     S: int                   # message-slot capacity per (src,dst) device pair
     weighted: bool
     fold_tile: int           # blocked-fold message tile (from the Layout)
+    fold_q: int              # two-level fold bucket width (from the Layout)
 
     # ---- DC scatter side (per source device) ----
     out_src_local: np.ndarray   # int32[D, D, S]
@@ -184,7 +185,7 @@ def shard_layout(L: Layout, D: int) -> ShardedLayout:
     deg_pad[:n_pad] = deg_np
     return ShardedLayout(
         D=D, kpd=kpd, q=q, nv=nv, n=L.n, S=S, weighted=L.weighted,
-        fold_tile=L.fold_tile,
+        fold_tile=L.fold_tile, fold_q=L.fold_q,
         out_src_local=out_src_local, out_valid=out_valid,
         in_msg_slot=in_msg_slot, in_dst_local=in_dst_local,
         in_valid=in_valid, in_w=in_w,

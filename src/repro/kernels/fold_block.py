@@ -44,9 +44,12 @@ ENV_FOLD_TILE = "REPRO_FOLD_TILE"
 # block per grid step, so compute and VMEM grow linearly in the segment
 # count: 256 x 4096 x 4B = 4 MB keeps the block (plus the resident
 # accumulator) inside a TPU core's ~16 MB VMEM.  Above the cap the
-# FoldKernel wrapper (repro.kernels.ops) falls back to the ref fold —
-# the paper's own regime anyway, since a partition's vertex data is
-# meant to fit the private cache.
+# FoldKernel wrapper (repro.kernels.ops) switches to the two-level
+# blocked fold (repro.kernels.fold_two_level): per-bucket [q]-sized
+# sub-accumulators whose VMEM footprint is bounded regardless of the
+# segment count — still Pallas, still no segment/scatter ops.  The cap
+# is therefore a *crossover point* between two Pallas lowerings, not a
+# handoff to ref.
 DEFAULT_FOLD_MAX_SEGMENTS = 4096
 ENV_FOLD_MAX_SEGMENTS = "REPRO_FOLD_MAX_SEGMENTS"
 _LANES = 128
@@ -61,8 +64,8 @@ def default_fold_tile() -> int:
 
 
 def max_fold_segments() -> int:
-    """Largest segment count the blocked kernel will take on before the
-    FoldKernel wrapper falls back to the ref fold
+    """Largest segment count the *flat* blocked kernel will take on before
+    the FoldKernel wrapper switches to the two-level blocked fold
     (``REPRO_FOLD_MAX_SEGMENTS`` overrides the static default)."""
     env = os.environ.get(ENV_FOLD_MAX_SEGMENTS)
     return int(env) if env else DEFAULT_FOLD_MAX_SEGMENTS

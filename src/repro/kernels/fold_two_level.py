@@ -1,0 +1,175 @@
+"""Two-level blocked segmented fold — the Gather phase past the VMEM cap.
+
+The flat blocked fold (:mod:`repro.kernels.fold_block`) materializes a
+``[fold_tile, num_segments_padded]`` one-hot block per grid step, so its
+VMEM footprint grows linearly in the segment count and it stops being
+lowerable past ``REPRO_FOLD_MAX_SEGMENTS``.  This kernel lifts that cap by
+hierarchical accumulation ("Making Caches Work for Graph Analytics",
+Zhang et al.): segment ids are split two-level into a *coarse bucket*
+``id // q`` and an *offset within the bucket* ``id % q``, and the fold
+runs over a ``(num_buckets, num_tiles)`` grid —
+
+  * the inner grid dimension streams ``fold_tile``-sized message blocks,
+    exactly like the flat fold;
+  * the outer dimension walks the ``nb = ceil(num_segments / q)`` coarse
+    buckets; bucket ``b``'s ``[q]``-sized sub-accumulator is the revisited
+    output block, VMEM-resident across the whole inner sweep;
+  * the one-hot combine is ``[fold_tile, q]`` — sized by the *bucket*
+    width, not the segment count, so VMEM stays bounded for any
+    ``num_segments``;
+  * a per-tile bucket range ``[bmin, bmax]`` (computed from the valid ids
+    before the ``pallas_call``) predicates each grid step: a tile whose
+    messages cannot land in bucket ``b`` is skipped.  The engines' DC
+    streams are destination-major *sorted* (the pre-written ``dc_bin``
+    reads bin columns in order), so each tile covers O(1) buckets and the
+    effective work collapses from ``nb x nt`` to ``~nb + nt`` body runs —
+    the paper's cache- and work-efficiency, transposed to buckets.
+
+Stage 2 — combining the per-bucket partials into the flat
+``[num_segments]`` output — is where the hierarchy pays off: buckets tile
+the segment space disjointly, so the combine is a relayout of the
+``[nb, q]`` partials, not another reduction pass.  No
+``jax.ops.segment_*``, no scatter anywhere in the lowering, so the kernel
+traces inside ``shard_map`` bodies just like the flat fold (same registry
+contract, same monoids, same masked-VPU combine — the MXU one-hot matmul
+stays off the table for the NaN/int-truncation reasons documented in
+:mod:`repro.kernels.fold_block`).
+
+``q`` need not divide the segment count, be a power of two, or be
+lane-aligned (TPU-native callers should keep it a multiple of 128); the
+bucket split uses real division, not a shift.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .segment_combine import _identity_val
+
+# Bucket width of the two-level fold: how many consecutive segments one
+# VMEM-resident sub-accumulator covers.  256 keeps the [fold_tile, q]
+# one-hot block at flat-fold-default size (256 x 256 x 4B = 256 KB) while
+# staying a lane multiple for the TPU path; the autotuner sweeps it
+# jointly with fold_tile (Eq. 1's cost model predicts the interaction).
+DEFAULT_FOLD_Q = 256
+ENV_FOLD_Q = "REPRO_FOLD_Q"
+
+
+def default_fold_q() -> int:
+    """Bucket width for the two-level fold: the ``REPRO_FOLD_Q`` override
+    if set, else the static default (autotune sweeps / layouts pass an
+    explicit ``fold_q`` instead)."""
+    env = os.environ.get(ENV_FOLD_Q)
+    return int(env) if env else DEFAULT_FOLD_Q
+
+
+def _kernel(vals_ref, valid_ref, ids_ref,              # VMEM in (one tile)
+            bmin_ref, bmax_ref,                        # VMEM in (per tile)
+            acc_ref, touched_ref,                      # VMEM out (resident)
+            *, monoid: str, q: int):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    ident = _identity_val(monoid, acc_ref.dtype)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, ident)
+        touched_ref[...] = jnp.zeros_like(touched_ref)
+
+    # bucket-range predication: tiles with no message in bucket b are
+    # skipped — for the engines' destination-sorted streams this is the
+    # 2-level active list of the paper, applied to coarse buckets
+    @pl.when((bmin_ref[0] <= b) & (b <= bmax_ref[0]))
+    def _body():
+        vals = vals_ref[...]                            # [T]
+        valid = valid_ref[...] > 0                      # [T]
+        ids = ids_ref[...]                              # [T]
+        bucket = ids // q
+        off = ids - bucket * q
+        cols = jax.lax.broadcasted_iota(jnp.int32, (vals.shape[0], q), 1)
+        onehot = ((off[:, None] == cols) & (bucket == b)[:, None]
+                  & valid[:, None])                     # [T, q]
+        if monoid == "add":
+            masked = jnp.where(onehot, vals[:, None],
+                               jnp.zeros((), acc_ref.dtype))
+            contrib = jnp.sum(masked, axis=0)
+            acc_ref[...] = acc_ref[...] \
+                + contrib.astype(acc_ref.dtype)[None, :]
+        elif monoid == "min":
+            masked = jnp.where(onehot, vals[:, None], ident)
+            acc_ref[...] = jnp.minimum(acc_ref[...],
+                                       jnp.min(masked, axis=0)[None, :])
+        elif monoid == "max":
+            masked = jnp.where(onehot, vals[:, None], ident)
+            acc_ref[...] = jnp.maximum(acc_ref[...],
+                                       jnp.max(masked, axis=0)[None, :])
+        touched_ref[...] = jnp.maximum(
+            touched_ref[...],
+            jnp.max(onehot.astype(jnp.int32), axis=0)[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "monoid",
+                                             "fold_tile", "fold_q",
+                                             "interpret"))
+def two_level_segment_fold(vals, valid, ids, num_segments: int, *,
+                           monoid: str = "add", fold_tile: int = 256,
+                           fold_q: int = DEFAULT_FOLD_Q,
+                           interpret: bool = True):
+    """Segmented monoid fold via per-bucket VMEM sub-accumulators.
+
+    Same contract as :func:`repro.kernels.fold_block.blocked_segment_fold`
+    (and registry kernel ``fold``):
+
+      vals:  [N] message value per slot.
+      valid: [N] bool/int validity; invalid slots contribute nothing.
+      ids:   [N] int32 segment id per slot; ids outside
+             ``[0, num_segments)`` contribute nothing (the engines point
+             sentinel slots at the overflow bin ``num_segments - 1``).
+      num_segments: static segment count (engines pass ``nv + 1``) — any
+             size; VMEM use is bounded by ``fold_tile x fold_q``.
+      fold_tile: messages per grid step.
+      fold_q: segments per coarse bucket (the sub-accumulator width).
+    Returns:
+      acc [num_segments] monoid fold, touched [num_segments] bool.
+    """
+    n = vals.shape[0]
+    q = int(fold_q)
+    nt = max(1, -(-n // fold_tile))
+    n_pad = nt * fold_tile
+    nb = max(1, -(-num_segments // q))
+    ident = _identity_val(monoid, vals.dtype)
+    vals = jnp.pad(vals, (0, n_pad - n), constant_values=ident)
+    valid = jnp.pad(valid.astype(jnp.int32), (0, n_pad - n))
+    ids = jnp.pad(ids.astype(jnp.int32), (0, n_pad - n))
+
+    # per-tile coarse-bucket ranges over the *valid* slots only: an
+    # all-invalid tile gets the empty range [nb, -1] and is never entered
+    vb = valid > 0
+    bt = jnp.where(vb, ids // q, -1)
+    bmax = jnp.clip(jnp.max(bt.reshape(nt, fold_tile), axis=1), -1, nb - 1)
+    bmin = jnp.clip(
+        jnp.min(jnp.where(vb, ids // q, nb).reshape(nt, fold_tile), axis=1),
+        0, nb)
+
+    acc, touched = pl.pallas_call(
+        functools.partial(_kernel, monoid=monoid, q=q),
+        grid=(nb, nt),
+        in_specs=[pl.BlockSpec((fold_tile,), lambda b, t: (t,)),
+                  pl.BlockSpec((fold_tile,), lambda b, t: (t,)),
+                  pl.BlockSpec((fold_tile,), lambda b, t: (t,)),
+                  pl.BlockSpec((1,), lambda b, t: (t,)),
+                  pl.BlockSpec((1,), lambda b, t: (t,))],
+        out_specs=[pl.BlockSpec((1, q), lambda b, t: (b, 0)),
+                   pl.BlockSpec((1, q), lambda b, t: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, q), vals.dtype),
+                   jax.ShapeDtypeStruct((nb, q), jnp.int32)],
+        interpret=interpret,
+    )(vals, valid, ids, bmin.astype(jnp.int32), bmax.astype(jnp.int32))
+    # stage 2: buckets tile the segment space disjointly, so combining the
+    # per-bucket partials into the flat output is a relayout, not a fold
+    return (acc.reshape(-1)[:num_segments],
+            touched.reshape(-1)[:num_segments] > 0)

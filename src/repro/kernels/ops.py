@@ -23,6 +23,7 @@ from . import ref as kref
 from .dc_gather import dc_gather
 from .fold_block import (blocked_segment_fold, default_fold_tile,
                          max_fold_segments)
+from .fold_two_level import default_fold_q, two_level_segment_fold
 from .segment_combine import segment_combine, _identity_val
 from .spmv_block import spmv_block
 
@@ -118,32 +119,45 @@ class FoldKernel:
     engine folds each device's received bin column under ``shard_map``,
     and the single-device engine folds the compacted SC stream.  The
     message-tile size comes from the tuning sweep (``tile=``), the
-    ``REPRO_FOLD_TILE`` override, or the static default, in that order.
+    ``REPRO_FOLD_TILE`` override, or the static default, in that order;
+    the two-level bucket width resolves the same way (``q=`` /
+    ``REPRO_FOLD_Q`` / static default).
+
+    Segment-count regimes — both are Pallas lowerings:
+
+      * ``num_segments <= REPRO_FOLD_MAX_SEGMENTS``: the flat blocked
+        fold (one VMEM-resident ``[num_segments_padded]`` accumulator,
+        :mod:`repro.kernels.fold_block`);
+      * above the cap: the two-level blocked fold (per-bucket ``[q]``
+        sub-accumulators, :mod:`repro.kernels.fold_two_level`), whose
+        VMEM footprint is bounded by ``fold_tile x q`` for any segment
+        count.
+
+    The ref fold no longer rides along as a silent large-``num_segments``
+    cliff; ``RefFold`` is what the explicit ``ref`` backend constructs.
     """
 
     def __init__(self, monoid_name: str, dtype, interpret: bool = True,
-                 tile=None):
+                 tile=None, q=None):
         self.monoid = monoid_name
         self.dtype = jnp.dtype(dtype)
         self.interpret = interpret
         self.tile = tile
-        self._ref_fold = None
-
-    def _ref(self):
-        if self._ref_fold is None:
-            from ..core.monoid import REGISTRY
-            self._ref_fold = RefFold(REGISTRY[self.monoid](self.dtype))
-        return self._ref_fold
+        self.q = q
 
     def __call__(self, vals, valid, ids, num_segments):
-        # the one-hot combine is O(stream x segments) with the whole
-        # accumulator VMEM-resident; past the cap that stops being the
-        # paper's cache-resident regime, so run the ref fold instead
-        if int(num_segments) > max_fold_segments():
-            return self._ref()(vals, valid, ids, num_segments)
+        ns = int(num_segments)
         tile = int(self.tile) if self.tile else default_fold_tile()
+        if ns > max_fold_segments():
+            # the flat one-hot block would outgrow VMEM: fold through the
+            # per-bucket sub-accumulators instead (still Pallas, still no
+            # segment/scatter ops in the lowering)
+            q = int(self.q) if self.q else default_fold_q()
+            return two_level_segment_fold(
+                vals, valid, ids, ns, monoid=self.monoid, fold_tile=tile,
+                fold_q=q, interpret=self.interpret)
         return blocked_segment_fold(
-            vals, valid, ids, int(num_segments), monoid=self.monoid,
+            vals, valid, ids, ns, monoid=self.monoid,
             fold_tile=tile, interpret=self.interpret)
 
 
@@ -246,4 +260,4 @@ def make_kernels(layout, monoid, backend=None, platform=None,
 __all__ = ["GatherKernel", "ScatterKernel", "SpmvKernel", "FoldKernel",
            "RefGather", "RefScatter", "RefSpmv", "RefFold", "make_kernels",
            "segment_combine", "dc_gather", "spmv_block",
-           "blocked_segment_fold", "kref"]
+           "blocked_segment_fold", "two_level_segment_fold", "kref"]

@@ -144,10 +144,11 @@ def test_fold_tile_knob(layout, rng, monkeypatch):
     assert np.array_equal(np.asarray(acc16), np.asarray(acc_def))
 
 
-def test_fold_segment_cap_falls_back_to_ref(layout, rng, monkeypatch):
-    """Past REPRO_FOLD_MAX_SEGMENTS the one-hot combine leaves the
-    cache-resident regime; FoldKernel must switch to the ref fold (same
-    results, no Pallas call) instead of materializing a huge block."""
+def test_fold_segment_cap_switches_to_two_level(layout, rng, monkeypatch):
+    """Past REPRO_FOLD_MAX_SEGMENTS the flat one-hot block would outgrow
+    VMEM; FoldKernel must switch to the two-level bucketed fold (same
+    results, still a Pallas call — the old silent handoff to ref is
+    gone)."""
     from repro.kernels import fold_block
     mono = MONOIDS[("add", "float32")]()
     fold = registry.BACKENDS["pallas-interpret"].segment_fold(mono)
@@ -159,13 +160,131 @@ def test_fold_segment_cap_falls_back_to_ref(layout, rng, monkeypatch):
     monkeypatch.setenv(fold_block.ENV_FOLD_MAX_SEGMENTS, str(ns - 1))
     assert fold_block.max_fold_segments() == ns - 1
 
-    def boom(*a, **kw):
-        raise AssertionError("blocked kernel ran past the segment cap")
     import repro.kernels.ops as kops
+
+    def boom(*a, **kw):
+        raise AssertionError("flat blocked kernel ran past the segment cap")
+    ran = {}
+    two_level = kops.two_level_segment_fold
+
+    def spy(*a, **kw):
+        ran["two_level"] = True
+        return two_level(*a, **kw)
     monkeypatch.setattr(kops, "blocked_segment_fold", boom)
+    monkeypatch.setattr(kops, "two_level_segment_fold", spy)
     acc, touched = fold(vals, valid, ids, ns)
+    assert ran.get("two_level"), "two-level fold did not run past the cap"
     assert np.array_equal(np.asarray(acc), np.asarray(want[0]))
     assert np.array_equal(np.asarray(touched), np.asarray(want[1]))
+    # ... and RefFold is only reachable as the explicit 'ref' backend
+    assert isinstance(registry.BACKENDS["ref"].segment_fold(mono),
+                      kops.RefFold)
+
+
+def test_fold_resolves_pallas_at_4x_cap(rng, monkeypatch):
+    """Acceptance: for num_segments >= 4x the old 4096 cap the registry
+    fold is still a Pallas kernel (two-level), bit-exact vs the ref
+    fold."""
+    from repro.kernels import fold_block
+    monkeypatch.delenv(registry.ENV_VAR, raising=False)
+    monkeypatch.delenv(fold_block.ENV_FOLD_MAX_SEGMENTS, raising=False)
+    ns = 4 * fold_block.DEFAULT_FOLD_MAX_SEGMENTS + 13
+    b = registry.resolve("fold", "add", platform="cpu")
+    assert b.name == "pallas-interpret"
+    mono = MONOIDS[("add", "int32")]()
+    fold = b.segment_fold(mono)
+    n = 3000
+    vals = jnp.asarray(rng.integers(-64, 64, n).astype(np.int32))
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    ids = jnp.asarray(np.sort(rng.integers(0, ns, n)).astype(np.int32))
+    import repro.kernels.ops as kops
+
+    def boom(*a, **kw):
+        raise AssertionError("flat blocked kernel ran at 4x the cap")
+    monkeypatch.setattr(kops, "blocked_segment_fold", boom)
+    acc, touched = fold(vals, valid, ids, ns)
+    racc, rtouched = registry.BACKENDS["ref"].segment_fold(mono)(
+        vals, valid, ids, ns)
+    assert np.array_equal(np.asarray(acc), np.asarray(racc))
+    assert np.array_equal(np.asarray(touched), np.asarray(rtouched))
+
+
+def test_fold_q_knob(layout, rng, monkeypatch):
+    """REPRO_FOLD_Q steers the two-level fold's bucket width; any valid
+    width (power of two or not) produces identical results."""
+    from repro.kernels import fold_block, fold_two_level
+    mono = MONOIDS[("add", "float32")]()
+    fold = registry.BACKENDS["pallas-interpret"].segment_fold(mono)
+    assert fold.q is None                   # resolved per call, from env
+    ns = layout.n_pad + 1
+    # force the two-level path on the module-scope layout's stream
+    monkeypatch.setenv(fold_block.ENV_FOLD_MAX_SEGMENTS, str(ns - 1))
+    vals = _edge_vals(rng, layout, "float32")
+    valid = jnp.asarray(layout.edge_valid)
+    ids = jnp.where(valid, jnp.asarray(layout.edge_dst), ns - 1)
+    monkeypatch.setenv(fold_two_level.ENV_FOLD_Q, "24")
+    assert fold_two_level.default_fold_q() == 24
+    acc24, _ = fold(vals, valid, ids, ns)
+    monkeypatch.setenv(fold_two_level.ENV_FOLD_Q, "37")
+    acc37, _ = fold(vals, valid, ids, ns)
+    monkeypatch.delenv(fold_two_level.ENV_FOLD_Q)
+    acc_def, _ = fold(vals, valid, ids, ns)
+    assert np.array_equal(np.asarray(acc24), np.asarray(acc37))
+    assert np.array_equal(np.asarray(acc24), np.asarray(acc_def))
+
+
+def test_layouts_carry_fold_q(monkeypatch):
+    """build_layout resolves fold_q (REPRO_FOLD_Q > tuned/static geometry)
+    and shard_layout propagates it, so both engines inherit the bucket
+    width through the registry without further plumbing."""
+    from repro.graph.shard import shard_layout
+    from repro.kernels import fold_two_level
+    # 'default' means no override: the CI kernels lane re-runs this module
+    # under both REPRO_KERNEL_BACKEND settings, and under 'ref' the fold
+    # below is a RefFold with no tile/q to carry
+    monkeypatch.delenv(registry.ENV_VAR, raising=False)
+    g = rmat(6, 8, seed=3)
+    L = build_layout(g, k=4, edge_tile=32, msg_tile=16)
+    assert L.fold_q == tuning.DEFAULT_GEOMETRY.fold_q
+    monkeypatch.setenv(fold_two_level.ENV_FOLD_Q, "40")
+    L2 = build_layout(g, k=4, edge_tile=32, msg_tile=16)
+    assert L2.fold_q == 40
+    assert shard_layout(L2, 2).fold_q == 40
+    # explicit argument outranks the env knob
+    L3 = build_layout(g, k=4, edge_tile=32, msg_tile=16, fold_q=64)
+    assert L3.fold_q == 64
+    # and make_kernels hands the layout's fold_q to the FoldKernel
+    kset = registry.make_kernels(L3, MONOIDS[("add", "float32")]())
+    assert kset.fold.q == 64
+    # REPRO_FOLD_TILE steers layouts the same way (engines always pass
+    # the layout's fold_tile, so the env must be honoured at build time)
+    from repro.kernels import fold_block
+    monkeypatch.setenv(fold_block.ENV_FOLD_TILE, "48")
+    L4 = build_layout(g, k=4, edge_tile=32, msg_tile=16)
+    assert L4.fold_tile == 48
+    assert registry.make_kernels(L4, MONOIDS[("add", "float32")]()) \
+        .fold.tile == 48
+
+
+def test_stale_tuning_cache_is_a_miss(tmp_path):
+    """A cache entry swept before a knob existed must read as a miss (so
+    autotune re-sweeps) rather than pinning the new knob to its untuned
+    default forever."""
+    import json as _json
+    g = rmat(6, 8, seed=2)
+    geom = tuning.autotune(g, k=4, backend="ref", cache_dir=tmp_path,
+                           reps=1)
+    path = next(Path(tmp_path).glob("*.json"))
+    rec = _json.loads(path.read_text())
+    del rec["fold_q"]
+    path.write_text(_json.dumps(rec))
+    assert tuning.load_cached(g.n, g.m, 4, False, "cpu", "ref",
+                              cache_dir=tmp_path) is None
+    # ... and a fresh autotune() re-sweeps and restores a complete entry
+    geom2 = tuning.autotune(g, k=4, backend="ref", cache_dir=tmp_path,
+                            reps=1)
+    rec2 = _json.loads(path.read_text())
+    assert rec2["fold_q"] == geom2.fold_q
 
 
 @pytest.mark.parametrize("backend", PARITY_BACKENDS)
@@ -310,7 +429,9 @@ def test_autotune_caches_and_feeds_layout(tmp_path, monkeypatch):
     rec = json.loads(files[0].read_text())
     assert rec["edge_tile"] == geom.edge_tile
     assert rec["msg_tile"] == geom.msg_tile
+    assert rec["fold_q"] == geom.fold_q
     assert len(rec["sweep"]) == len(tuning.candidates())
+    assert all("fold_q" in s for s in rec["sweep"])
     # second call is a cache hit (sweep entries unchanged on disk)
     assert tuning.autotune(g, k=4, backend="ref",
                            cache_dir=tmp_path) == geom
@@ -372,27 +493,32 @@ def test_check_bench_regression(tmp_path):
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
 
-    kernels = ("gather", "scatter", "spmv", "fold")
+    # the guard must cover the over-cap two-level fold rows (fold2) the
+    # same way it covers every other kernel row
+    kernels = ("gather", "scatter", "spmv", "fold", "fold2")
 
     def doc(walls):
         return {"results": [
             {"kernel": k, "backend": "ref", "monoid": "add", "scale": 6,
              "wall_s": w} for k, w in zip(kernels, walls)]}
-    flat = doc([0.010] * 4)
+    flat = doc([0.010] * 5)
     assert mod.check(flat, flat, 2.0, 0.005) == 0
-    # one kernel 3x while the rest hold: a real regression
-    assert mod.check(doc([0.030, 0.010, 0.010, 0.010]), flat,
+    # one kernel 3x while the rest hold: a real regression — including
+    # when the regressed row is the two-level fold
+    assert mod.check(doc([0.030, 0.010, 0.010, 0.010, 0.010]), flat,
                      2.0, 0.005) == 1
-    # half the kernels ~4x: the healthy rows must outvote them (a median
-    # calibration would forgive this as 'machine speed')
-    assert mod.check(doc([0.039, 0.039, 0.010, 0.010]), flat,
+    assert mod.check(doc([0.010, 0.010, 0.010, 0.010, 0.030]), flat,
+                     2.0, 0.005) == 1
+    # two of five kernels ~4x: the healthy rows must outvote them (a
+    # median calibration would forgive this as 'machine speed')
+    assert mod.check(doc([0.039, 0.039, 0.010, 0.010, 0.010]), flat,
                      2.0, 0.005) == 1
     # a uniformly 2.5x slower runner is machine speed, not a regression
-    assert mod.check(doc([0.025] * 4), flat, 2.0, 0.005) == 0
+    assert mod.check(doc([0.025] * 5), flat, 2.0, 0.005) == 0
     # ... but a uniform slowdown beyond the calibration clamp still fails
-    assert mod.check(doc([0.080] * 4), flat, 2.0, 0.005) == 1
+    assert mod.check(doc([0.080] * 5), flat, 2.0, 0.005) == 1
     # sub-floor rows are dispatch jitter and never flag
-    assert mod.check(doc([0.004] * 4), doc([0.001] * 4), 2.0, 0.005) == 0
+    assert mod.check(doc([0.004] * 5), doc([0.001] * 5), 2.0, 0.005) == 0
     other = {"results": [{"kernel": "spmv", "backend": "ref",
                           "monoid": "add", "scale": 8, "wall_s": 1.0}]}
     assert mod.check(flat, other, 2.0, 0.005) == 2              # no overlap
@@ -412,6 +538,7 @@ def test_bench_kernels_smoke(tmp_path):
     assert disk["meta"]["platform"] == jax.default_backend()
     rows = disk["results"]
     assert {r["kernel"] for r in rows} == {"gather", "scatter", "spmv",
-                                           "fold"}
+                                           "fold", "fold2"}
     assert {r["backend"] for r in rows} == {"ref", "pallas-interpret"}
     assert all(r["wall_s"] > 0 for r in rows)
+    assert all(r["fold_q"] > 0 for r in rows)

@@ -1,11 +1,15 @@
-"""Property tests (hypothesis): the blocked Pallas segmented fold.
+"""Property tests (hypothesis): the blocked Pallas segmented folds.
 
-The fold behind registry kernel ``fold`` (:mod:`repro.kernels.fold_block`)
-must agree with the ``jax.ops.segment_*`` oracles for ANY message stream:
-duplicate ids, empty segments, out-of-order ids, all-invalid blocks, the
-``n_pad + 1`` overflow bin, and stream lengths that do not divide the
-message tile.  Payloads are integer-valued so even the f32 add fold is
-exact and the comparison can be bit-for-bit.
+The folds behind registry kernel ``fold`` — the flat
+:mod:`repro.kernels.fold_block` and the two-level
+:mod:`repro.kernels.fold_two_level` that takes over past
+``REPRO_FOLD_MAX_SEGMENTS`` — must agree with the ``jax.ops.segment_*``
+oracles (and each other) for ANY message stream: duplicate ids, empty
+segments, out-of-order ids, all-invalid blocks, the ``n_pad + 1``
+overflow bin, segment counts on both sides of the cap, non-power-of-two
+bucket widths, and stream lengths that do not divide the message tile.
+Payloads are integer-valued so even the f32 add fold is exact and the
+comparison can be bit-for-bit.
 """
 import jax
 import jax.numpy as jnp
@@ -17,7 +21,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.backend import registry
 from repro.core import monoid as M
-from repro.kernels.fold_block import blocked_segment_fold
+from repro.kernels.fold_block import (DEFAULT_FOLD_MAX_SEGMENTS,
+                                      blocked_segment_fold)
+from repro.kernels.fold_two_level import two_level_segment_fold
 
 SEGMENT_OPS = {"add": jax.ops.segment_sum, "min": jax.ops.segment_min,
                "max": jax.ops.segment_max}
@@ -85,3 +91,96 @@ def test_blocked_fold_all_invalid_returns_identity(data):
     assert np.array_equal(np.asarray(acc),
                           np.full(ns, mono.identity, np.dtype(dtype)))
     assert not np.asarray(touched).any()
+
+
+# ----------------------------------------------------------------------
+# two-level fold: segment counts across the REPRO_FOLD_MAX_SEGMENTS cap
+# ----------------------------------------------------------------------
+
+CAP = DEFAULT_FOLD_MAX_SEGMENTS
+# closed (num_segments, fold_q) pairs keep the bucket grid small enough
+# for interpret mode while covering: below / at / just past / 2x / 3x the
+# cap, bucket widths that are non-powers-of-two, that don't divide the
+# segment count, and that exceed it (single-bucket degenerate case)
+NS_Q_PAIRS = ((8, 3), (100, 7), (1024, 2048), (CAP - 1, 512),
+              (CAP, 1000), (CAP + 1, 257), (2 * CAP, 1024),
+              (3 * CAP, 4096))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_two_level_fold_matches_flat_and_segment_ops(data):
+    """two-level ≡ flat blocked ≡ jax.ops.segment_* for segment counts on
+    both sides of the cap (the flat kernel has no VMEM ceiling in
+    interpret mode, so it can serve as a second oracle everywhere)."""
+    monoid, dtype = data.draw(st.sampled_from(sorted(MONOIDS)))
+    mono = MONOIDS[(monoid, dtype)]()
+    ns, q = data.draw(st.sampled_from(NS_Q_PAIRS))
+    tile = data.draw(st.sampled_from(FOLD_TILES))
+    n = data.draw(st.integers(0, 60))
+    seed = data.draw(st.integers(0, 10**6))
+    rng = np.random.default_rng(seed)
+
+    vals = jnp.asarray(rng.integers(-64, 64, n).astype(np.dtype(dtype)))
+    valid = jnp.asarray(rng.random(n) < data.draw(
+        st.sampled_from([0.0, 0.5, 1.0])))
+    # duplicates + out-of-order by construction; ns - 1 doubles as the
+    # engines' overflow bin and must behave like any other segment
+    ids = jnp.asarray(rng.integers(0, ns, n).astype(np.int32))
+
+    acc2, touched2 = two_level_segment_fold(vals, valid, ids, ns,
+                                            monoid=monoid, fold_tile=tile,
+                                            fold_q=q, interpret=True)
+    mvals = jnp.where(valid, vals, mono.identity)
+    ref_acc = SEGMENT_OPS[monoid](mvals, ids, num_segments=ns)
+    ref_touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
+                                      num_segments=ns) > 0
+    assert np.array_equal(np.asarray(acc2), np.asarray(ref_acc))
+    assert np.array_equal(np.asarray(touched2), np.asarray(ref_touched))
+
+    facc, ftouched = blocked_segment_fold(vals, valid, ids, ns,
+                                          monoid=monoid, fold_tile=tile,
+                                          interpret=True)
+    assert np.array_equal(np.asarray(acc2), np.asarray(facc))
+    assert np.array_equal(np.asarray(touched2), np.asarray(ftouched))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_two_level_fold_all_invalid_returns_identity(data):
+    monoid, dtype = data.draw(st.sampled_from(sorted(MONOIDS)))
+    mono = MONOIDS[(monoid, dtype)]()
+    ns, q = data.draw(st.sampled_from(NS_Q_PAIRS))
+    n = data.draw(st.integers(0, 40))
+    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
+    vals = jnp.asarray(rng.integers(-64, 64, n).astype(np.dtype(dtype)))
+    ids = jnp.asarray(rng.integers(0, ns, n).astype(np.int32))
+    acc, touched = two_level_segment_fold(vals, jnp.zeros((n,), jnp.bool_),
+                                          ids, ns, monoid=monoid,
+                                          fold_tile=8, fold_q=q,
+                                          interpret=True)
+    assert np.array_equal(np.asarray(acc),
+                          np.full(ns, mono.identity, np.dtype(dtype)))
+    assert not np.asarray(touched).any()
+
+
+def test_two_level_fold_out_of_range_ids_contribute_nothing():
+    """The fold contract: ids outside [0, num_segments) — including
+    negative and past-the-padding ids — land nowhere, for both blocked
+    kernels."""
+    ns, q = 10, 3
+    ids = jnp.asarray(np.array([0, 5, 9, 10, 11, 50, -3, -1], np.int32))
+    vals = jnp.ones((8,), jnp.float32)
+    valid = jnp.ones((8,), bool)
+    for fold in (
+            lambda: two_level_segment_fold(vals, valid, ids, ns,
+                                           monoid="add", fold_tile=4,
+                                           fold_q=q, interpret=True),
+            lambda: blocked_segment_fold(vals, valid, ids, ns,
+                                         monoid="add", fold_tile=4,
+                                         interpret=True)):
+        acc, touched = fold()
+        want = np.zeros(ns, np.float32)
+        want[[0, 5, 9]] = 1.0
+        assert np.array_equal(np.asarray(acc), want)
+        assert np.array_equal(np.asarray(touched), want > 0)
