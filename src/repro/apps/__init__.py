@@ -1,16 +1,17 @@
-from .bfs import bfs, bfs_program
+from .bfs import bfs, bfs_multi, bfs_program
 from .pagerank import pagerank, pagerank_program
-from .sssp import sssp, sssp_program
+from .sssp import sssp, sssp_multi, sssp_program
 from .cc import connected_components, cc_program
 from .nibble import nibble, nibble_program
-from .sssp_parents import sssp_with_parents, sssp_parents_program
+from .sssp_parents import (sssp_parents_multi, sssp_parents_program,
+                           sssp_with_parents)
 from .heat_kernel import heat_kernel_pr, heat_kernel_program
 from .pagerank_nibble import pagerank_nibble, pagerank_nibble_program
 
 __all__ = [
-    "bfs", "bfs_program", "pagerank", "pagerank_program",
-    "sssp", "sssp_program", "connected_components", "cc_program",
-    "nibble", "nibble_program", "sssp_with_parents",
-    "sssp_parents_program", "heat_kernel_pr", "heat_kernel_program",
-    "pagerank_nibble", "pagerank_nibble_program",
+    "bfs", "bfs_multi", "bfs_program", "pagerank", "pagerank_program",
+    "sssp", "sssp_multi", "sssp_program", "connected_components",
+    "cc_program", "nibble", "nibble_program", "sssp_with_parents",
+    "sssp_parents_multi", "sssp_parents_program", "heat_kernel_pr",
+    "heat_kernel_program", "pagerank_nibble", "pagerank_nibble_program",
 ]

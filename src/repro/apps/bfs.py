@@ -31,7 +31,7 @@ def bfs_program() -> VertexProgram:
 
 def bfs(layout, source: int, mode: str = "hybrid",
         use_pallas: bool = None, bw_ratio: float = 2.0,
-        backend=None, engine: Engine = None):
+        backend=None, engine: Engine = None, max_iters: int = None):
     n_pad = layout.n_pad
     parent = jnp.full((n_pad,), -1, jnp.int32).at[source].set(source)
     level = jnp.full((n_pad,), -1, jnp.int32).at[source].set(0)
@@ -42,7 +42,32 @@ def bfs(layout, source: int, mode: str = "hybrid",
         layout, bfs_program(), mode=mode, backend=backend,
         use_pallas=use_pallas, bw_ratio=bw_ratio)
     state, _, stats = eng.run({"parent": parent, "level": level, "vid": vid},
-                              frontier, max_iters=n_pad)
+                              frontier, max_iters=max_iters or n_pad)
     return {"parent": np.asarray(state["parent"])[:layout.n],
             "level": np.asarray(state["level"])[:layout.n],
+            "stats": stats}
+
+
+def bfs_multi(layout, sources, backend=None, engine: Engine = None,
+              max_iters: int = None):
+    """Batched multi-source BFS: one fused :meth:`Engine.run_batched`
+    invocation answers ``len(sources)`` queries, bit-exact with per-source
+    :func:`bfs` calls.  Row ``i`` of every result array belongs to
+    ``sources[i]``."""
+    sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+    B, n_pad = len(sources), layout.n_pad
+    lanes = jnp.arange(B)
+    src = jnp.asarray(sources, jnp.int32)
+    parent = jnp.full((B, n_pad), -1, jnp.int32).at[lanes, src].set(src)
+    level = jnp.full((B, n_pad), -1, jnp.int32).at[lanes, src].set(0)
+    vid = jnp.broadcast_to(jnp.arange(n_pad, dtype=jnp.uint32), (B, n_pad))
+    frontier = np.zeros((B, n_pad), bool)
+    frontier[np.arange(B), sources] = True
+    eng = engine if engine is not None else Engine(
+        layout, bfs_program(), mode="dc", backend=backend)
+    states, _, stats = eng.run_batched(
+        {"parent": parent, "level": level, "vid": vid}, frontier,
+        max_iters=max_iters or n_pad)
+    return {"parent": np.asarray(states["parent"])[:, :layout.n],
+            "level": np.asarray(states["level"])[:, :layout.n],
             "stats": stats}

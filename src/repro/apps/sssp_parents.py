@@ -39,20 +39,51 @@ def sssp_parents_program() -> VertexProgram:
                          apply_weight=apply_weight)
 
 
-def sssp_with_parents(layout, source: int, mode: str = "hybrid"):
+def sssp_with_parents(layout, source: int, mode: str = "hybrid",
+                      backend=None, engine: Engine = None,
+                      max_iters: int = None):
     assert layout.weighted, "needs edge weights"
     with jax.experimental.enable_x64():
         n_pad = layout.n_pad
-        program = sssp_parents_program()
         dist = jnp.full((n_pad,), jnp.inf, jnp.float32).at[source].set(0.0)
         parent = jnp.full((n_pad,), -1, jnp.int32).at[source].set(source)
         vid = jnp.arange(n_pad, dtype=jnp.uint32)
         frontier = np.zeros(n_pad, bool)
         frontier[source] = True
-        eng = Engine(layout, program, mode=mode)
+        eng = engine if engine is not None else Engine(
+            layout, sssp_parents_program(), mode=mode, backend=backend)
         state, _, stats = eng.run(
             {"dist": dist, "parent": parent, "vid": vid}, frontier,
-            max_iters=n_pad)
+            max_iters=max_iters or n_pad)
         return {"dist": np.asarray(state["dist"])[:layout.n],
                 "parent": np.asarray(state["parent"])[:layout.n],
+                "stats": stats}
+
+
+def sssp_parents_multi(layout, sources, engine: Engine = None,
+                       max_iters: int = None):
+    """Batched multi-source SSSP with parent tracking (uint64 packed
+    monoid, so the gather falls back to the ref kernels — still one fused
+    vmapped invocation per iteration).  Row ``i`` belongs to
+    ``sources[i]``."""
+    assert layout.weighted, "needs edge weights"
+    with jax.experimental.enable_x64():
+        sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+        B, n_pad = len(sources), layout.n_pad
+        src = jnp.asarray(sources, jnp.int32)
+        lanes = jnp.arange(B)
+        dist = jnp.full((B, n_pad), jnp.inf, jnp.float32) \
+            .at[lanes, src].set(0.0)
+        parent = jnp.full((B, n_pad), -1, jnp.int32).at[lanes, src].set(src)
+        vid = jnp.broadcast_to(jnp.arange(n_pad, dtype=jnp.uint32),
+                               (B, n_pad))
+        frontier = np.zeros((B, n_pad), bool)
+        frontier[np.arange(B), sources] = True
+        eng = engine if engine is not None else Engine(
+            layout, sssp_parents_program(), mode="dc")
+        states, _, stats = eng.run_batched(
+            {"dist": dist, "parent": parent, "vid": vid}, frontier,
+            max_iters=max_iters or n_pad)
+        return {"dist": np.asarray(states["dist"])[:, :layout.n],
+                "parent": np.asarray(states["parent"])[:, :layout.n],
                 "stats": stats}

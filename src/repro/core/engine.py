@@ -68,6 +68,15 @@ class IterStats:
     wall_s: float
 
 
+@dataclasses.dataclass
+class BatchIterStats:
+    """Per-iteration stats of a :meth:`Engine.run_batched` invocation."""
+    it: int
+    lanes_active: int         # queries still converging this iteration
+    n_active: int             # active vertices summed over all lanes
+    wall_s: float
+
+
 class Engine:
     """Single-device PPM engine.
 
@@ -281,6 +290,103 @@ class Engine:
                     dc_bytes=b["dc_bytes"], sc_bytes=b["sc_bytes"],
                     wall_s=time.perf_counter() - t0))
         return state, active, stats
+
+    # ------------------------------------------------------------------
+    def _batched_step_fn(self, B: int):
+        """Jitted batched iteration: the DC step vmapped over a leading
+        query axis, cached per batch size (shapes are static per B)."""
+        key = ("batched", B)
+        fn = self._step_cache.get(key)
+        if fn is not None:
+            return fn
+        step = self._step_fn(0, 0)        # DC-only step (no SC budgets)
+        k, q = self.k, self.q
+
+        def one(state, active, it):
+            # per-lane gPartList: partitions with >=1 active vertex run DC,
+            # empty partitions are excluded entirely (same decision `run`
+            # makes in mode='dc', but computed in-graph so it can vmap)
+            counts = active.astype(jnp.int32).reshape(k, q).sum(axis=1)
+            return step(state, active, counts > 0, it)
+
+        def batched(states, active, it):
+            done = ~active.any(axis=1)                         # [B]
+            new_states, new_active = jax.vmap(
+                one, in_axes=(0, 0, None))(states, active, it)
+            # freeze converged lanes: an empty frontier is already a
+            # no-op for every phase (all updates are masked on active /
+            # touched), but the explicit freeze makes the contract
+            # independent of the program's init/filter behaviour
+            keep = ~done
+            new_states = _tree_where(keep, new_states, states)
+            new_active = new_active & keep[:, None]
+            return new_states, new_active
+
+        fn = jax.jit(batched)
+        self._step_cache[key] = fn
+        return fn
+
+    def run_batched(self, states, frontiers, max_iters: int = 10_000,
+                    until_empty: bool = True, collect_stats: bool = True):
+        """Batched multi-source execution: B independent queries of the
+        same vertex program advance together through one vmapped DC
+        iteration per superstep.
+
+        ``states`` is a pytree whose leaves carry a leading query axis
+        ``[B, ...]``; ``frontiers`` is ``[B, n_pad]`` bool.  Every kernel
+        launch (scatter / gather / fold) is amortized across the batch —
+        the serving-tier analogue of the paper's §5 repeated-query
+        argument: the O(E) layout is resident and shared, only the O(V)
+        per-query state is replicated.  The *union* frontier drives
+        convergence (the loop runs until every lane drained); per-query
+        done masks freeze converged lanes inside a step, and between
+        steps converged lanes are compacted out of the batch entirely
+        (packed to the next power-of-two width, so at most log2(B)
+        distinct step shapes ever compile).  Results are bit-exact with
+        B sequential :meth:`run` calls in mode='dc'.
+        """
+        active = jnp.asarray(frontiers, jnp.bool_)
+        assert active.ndim == 2, "frontiers must be [B, n_pad]"
+        B = active.shape[0]
+        states = jax.tree_util.tree_map(jnp.asarray, states)
+        tmap = jax.tree_util.tree_map
+        stats = []
+        for it in range(max_iters):
+            lane_act = np.asarray(active.any(axis=1))
+            n_lanes = int(lane_act.sum())
+            if n_lanes == 0:
+                if until_empty:
+                    break
+                continue    # every phase masks on active: a no-op step
+            t0 = time.perf_counter()
+            n_act = int(jnp.sum(active)) if collect_stats else 0
+            if n_lanes == B:
+                states, active = self._batched_step_fn(B)(
+                    states, active, jnp.int32(it))
+            else:
+                # lane compaction: converged lanes drop out of the batch
+                # instead of riding along as frozen flops.  The packed
+                # width is the next power of two of the surviving lane
+                # count (padding repeats the first survivor, whose
+                # duplicate rows compute identical values, so the
+                # scatter-back below is deterministic), keeping the
+                # per-width jit cache at log2(B) entries.
+                idx_r = np.nonzero(lane_act)[0]
+                W = _next_pow2(n_lanes)
+                idx = jnp.asarray(np.concatenate(
+                    [idx_r, np.full(W - n_lanes, idx_r[0])]), jnp.int32)
+                sub_states = tmap(lambda a: a[idx], states)
+                sub_states, sub_active = self._batched_step_fn(W)(
+                    sub_states, active[idx], jnp.int32(it))
+                states = tmap(lambda f, p: f.at[idx].set(p),
+                              states, sub_states)
+                active = active.at[idx].set(sub_active)
+            jax.block_until_ready(active)
+            if collect_stats:
+                stats.append(BatchIterStats(
+                    it=it, lanes_active=n_lanes,
+                    n_active=n_act, wall_s=time.perf_counter() - t0))
+        return states, active, stats
 
     # ------------------------------------------------------------------
     def run_fused(self, state, frontier, iters: int):

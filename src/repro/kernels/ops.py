@@ -191,6 +191,13 @@ class RefGather:
     partitions contribute nothing) and masks invalid slots to the monoid
     identity, so it is interchangeable with the Pallas kernels under the
     engine and under parity tests.
+
+    The call carries a ``custom_vmap`` rule: under a leading query axis
+    (the batched multi-source engine path) XLA's default scatter batching
+    rule serializes catastrophically on CPU (~100x), so the batched fold
+    instead runs the *unbatched* segment ops over a flattened
+    ``lane * (n_pad+1) + dst`` segment space — per-lane cost identical to
+    the sequential fold, so batching only ever amortizes dispatch.
     """
 
     def __init__(self, layout, monoid):
@@ -201,8 +208,14 @@ class RefGather:
         # partition is the tile's, repeated
         self.edge_src_part = jnp.asarray(
             np.repeat(layout.tile_src_part, layout.edge_tile))
+        call = jax.custom_batching.custom_vmap(self._single)
+        call.def_vmap(self._vmap_rule)
+        self._call = call
 
     def __call__(self, edge_vals, edge_valid, part_active):
+        return self._call(edge_vals, edge_valid, part_active)
+
+    def _single(self, edge_vals, edge_valid, part_active):
         mono = self.monoid
         valid = (edge_valid.astype(bool)
                  & (part_active[self.edge_src_part] > 0))
@@ -211,6 +224,44 @@ class RefGather:
         touched = jax.ops.segment_max(valid.astype(jnp.int32), self.edge_dst,
                                       num_segments=self.n_pad + 1) > 0
         return acc[:self.n_pad], touched[:self.n_pad]
+
+    def _vmap_rule(self, axis_size, in_batched, edge_vals, edge_valid,
+                   part_active):
+        ev_b, evd_b, pa_b = in_batched
+        if not ev_b:
+            edge_vals = jnp.broadcast_to(
+                edge_vals, (axis_size,) + edge_vals.shape)
+        if not evd_b:
+            edge_valid = jnp.broadcast_to(
+                edge_valid, (axis_size,) + edge_valid.shape)
+        if not pa_b:
+            part_active = jnp.broadcast_to(
+                part_active, (axis_size,) + part_active.shape)
+        mono = self.monoid
+        B, ns = axis_size, self.n_pad + 1
+        valid = (edge_valid.astype(bool)
+                 & (jnp.take(part_active, self.edge_src_part, axis=1) > 0))
+        vals = jnp.where(valid, edge_vals.astype(mono.dtype), mono.identity)
+        # flattened segment space: lane b owns segments [b*ns, (b+1)*ns).
+        # The ids stay int32 (segment ops silently drop out-of-range ids,
+        # and int64 is unavailable without x64), so lanes are folded in
+        # chunks whose flattened space fits int32 — one chunk in practice.
+        lanes_per_chunk = max(1, (2**31 - 1) // ns)
+        accs, toucheds = [], []
+        for lo in range(0, B, lanes_per_chunk):
+            bc = min(lanes_per_chunk, B - lo)
+            fids = (jnp.arange(bc, dtype=jnp.int32)[:, None] * ns
+                    + self.edge_dst[None, :]).reshape(-1)
+            v = vals[lo:lo + bc]
+            accs.append(mono.segment_fold(
+                v.reshape(-1), fids, bc * ns).reshape(bc, ns))
+            toucheds.append(jax.ops.segment_max(
+                valid[lo:lo + bc].astype(jnp.int32).reshape(-1), fids,
+                num_segments=bc * ns).reshape(bc, ns) > 0)
+        acc = jnp.concatenate(accs) if len(accs) > 1 else accs[0]
+        touched = (jnp.concatenate(toucheds) if len(toucheds) > 1
+                   else toucheds[0])
+        return (acc[:, :self.n_pad], touched[:, :self.n_pad]), (True, True)
 
 
 class RefScatter:

@@ -7,9 +7,32 @@ Cache layouts (layer-stacked so decode scans layers exactly like training):
   ssm archs:       h [L, B, H, N, P] f32, conv [L, B, K-1, di+2N], len [B]
   hybrid:          ssm fields + shared-attn caches sk/sv
                    [n_inv, B, W, KV, dh]
+
+Graph-analytics serving (:class:`GraphQueryServer`) applies the same
+continuous-batching idea to PPM queries over one resident layout:
+
+  * **Batched multi-source execution** — queued BFS / SSSP /
+    SSSP-with-parents queries that differ only in their source vertex are
+    drained into one per-app batch and answered by a single fused
+    :meth:`repro.core.engine.Engine.run_batched` invocation (the compiled
+    DC iteration vmapped over a leading query axis), so every
+    scatter/gather/fold kernel launch is amortized across the batch.
+  * **Power-of-two padding** — batches are padded up to the next power of
+    two (by repeating the first source; padded lanes are discarded), so
+    the engine's per-batch-size jit cache holds at most log2(max_batch)
+    compiled steps instead of one per distinct queue depth.
+  * **LRU result memoization** — results are cached under
+    ``(layout identity, app, canonicalized params)``.  The invalidation
+    rule is layout identity: the server serves exactly one resident
+    layout, every cached entry is keyed on it, and pointing a server at a
+    new graph means constructing a new server (or calling
+    :meth:`GraphQueryServer.clear_cache`), never mutating the layout in
+    place.  Cached results are returned by reference and must be treated
+    as read-only.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
@@ -227,7 +250,7 @@ class Server:
         self.cache = init_cache(cfg, n_slots, max_len, dtype)
         self.free = list(range(n_slots))
         self.active = {}                       # slot -> Request
-        self.queue = []
+        self.queue = collections.deque()
         self.done = []
         self._decode = jax.jit(
             lambda p, t, c: decode_step(p, cfg, t, c, dtype=dtype))
@@ -263,7 +286,7 @@ class Server:
         """One scheduler tick: admit new requests, then decode one token."""
         while self.free and self.queue:
             slot = self.free.pop()
-            self._prefill_into_slot(slot, self.queue.pop(0))
+            self._prefill_into_slot(slot, self.queue.popleft())
         if not self.active:
             return False
         toks = jnp.asarray(self._next_tok)
@@ -311,40 +334,170 @@ class GraphQueryServer:
     :mod:`repro.backend` — the serving tier inherits the backend choice
     (and any autotuned tile geometry) from the same registry as the batch
     engines.
+
+    :meth:`step` is a real scheduler tick: it drains every queued query
+    that is batchable with the head of the queue (same app, same
+    non-source params, every param within the ``*_multi`` signature —
+    engine overrides and single-path-only kwargs opt out) into one
+    per-app batch, pads
+    the distinct sources to the next power of two (bounding the jit
+    cache), and answers the whole batch with a single fused
+    :meth:`~repro.core.engine.Engine.run_batched` invocation.  Repeated
+    ``(app, params)`` queries are memoized in an LRU result cache keyed
+    on layout identity (see the module docstring for the invalidation
+    rule).  Queries overriding ``mode`` / ``backend`` / ``bw_ratio`` run
+    on a dedicated engine and never touch the shared engine cache.
     """
 
-    def __init__(self, layout, backend=None, mode: str = "hybrid"):
+    #: apps whose queries differ only in ``source`` and can share a batch
+    BATCHED_APPS = ("bfs", "sssp", "sssp_parents")
+    #: the full param set the ``*_multi`` entry points accept; a query
+    #: carrying anything else (engine overrides, single-path-only kwargs
+    #: like ``use_pallas``) must take the single-query path
+    BATCH_PARAMS = frozenset({"source", "max_iters"})
+    #: engine-construction params: a query overriding any of these cannot
+    #: share the server engine (all three are baked in at construction)
+    ENGINE_KEYS = frozenset({"mode", "backend", "bw_ratio"})
+
+    def __init__(self, layout, backend=None, mode: str = "hybrid",
+                 max_batch: int = 64, cache_size: int = 128):
         self.layout = layout
         self.backend = backend
         self.mode = mode
+        self.max_batch = max_batch
+        self.cache_size = cache_size
         self._engines = {}            # app name -> shared Engine
-        self.queue = []
+        self.queue = collections.deque()
         self.done = []
+        self._result_cache = collections.OrderedDict()
+        self.cache_hits = 0
+        self.cache_misses = 0
 
+    # ---- shared engines ------------------------------------------------
     def _shared_engine(self, app: str, make_program):
         eng = self._engines.get(app)
         if eng is None:
             from ..core.engine import Engine
+            # engine construction never traces the program (only the app
+            # fns do, inside their own enable_x64 for sssp_parents), so
+            # no x64 context is needed here
             eng = Engine(self.layout, make_program(), mode=self.mode,
                          backend=self.backend)
             self._engines[app] = eng
         return eng
 
+    # ---- LRU result cache ----------------------------------------------
+    def _cache_key(self, q: GraphQuery):
+        """``(layout identity, app, canonicalized params)`` or None when a
+        param value defies hashing (such a query simply isn't memoized)."""
+        def canon(v):
+            if isinstance(v, (list, tuple, np.ndarray)):
+                return tuple(np.asarray(v).reshape(-1).tolist())
+            return v
+        try:
+            items = tuple(sorted((k, canon(v)) for k, v in q.params.items()))
+            hash(items)
+        except TypeError:
+            return None
+        return (id(self.layout), q.app, items)
+
+    def _cache_get(self, key):
+        if key is None or key not in self._result_cache:
+            return None
+        self._result_cache.move_to_end(key)
+        return self._result_cache[key]
+
+    def _cache_put(self, key, result):
+        if key is None:
+            return
+        self._result_cache[key] = result
+        self._result_cache.move_to_end(key)
+        while len(self._result_cache) > self.cache_size:
+            self._result_cache.popitem(last=False)
+
+    def clear_cache(self):
+        self._result_cache.clear()
+
+    # ---- batching ------------------------------------------------------
+    def _batch_sig(self, q: GraphQuery):
+        """Queries with equal signatures can ride one fused batch."""
+        if q.app not in self.BATCHED_APPS or "source" not in q.params \
+                or not (q.params.keys() <= self.BATCH_PARAMS):
+            return None
+        rest = {k: v for k, v in q.params.items() if k != "source"}
+        try:
+            return (q.app, tuple(sorted(rest.items())))
+        except TypeError:
+            return None
+
+    def _run_batch(self, batch):
+        """Answer a same-signature batch with one fused run_batched call."""
+        from ..apps.bfs import bfs_multi, bfs_program
+        from ..apps.sssp import sssp_multi, sssp_program
+        from ..apps.sssp_parents import (sssp_parents_multi,
+                                         sssp_parents_program)
+        multi = {"bfs": (bfs_multi, bfs_program),
+                 "sssp": (sssp_multi, sssp_program),
+                 "sssp_parents": (sssp_parents_multi, sssp_parents_program)}
+        run = []                       # queries that actually need a lane
+        for q in batch:
+            cached = self._cache_get(self._cache_key(q))
+            if cached is not None:
+                self.cache_hits += 1
+                q.result = cached
+                self.done.append(q)
+            else:
+                run.append(q)
+        if not run:
+            return
+        app = run[0].app
+        multi_fn, make_program = multi[app]
+        # duplicate sources share a lane; pad to the next power of two by
+        # repeating the first source so the per-batch-size jit cache stays
+        # logarithmic in max_batch (padded lanes are discarded below)
+        from ..core.engine import _next_pow2
+        lane_of = {}
+        for q in run:
+            lane_of.setdefault(int(q.params["source"]), len(lane_of))
+        sources = list(lane_of)
+        sources += [sources[0]] * (_next_pow2(len(sources)) - len(sources))
+        extra = {k: v for k, v in run[0].params.items() if k != "source"}
+        eng = self._shared_engine(app, make_program)
+        res = multi_fn(self.layout, sources, engine=eng, **extra)
+        for q in run:
+            i = lane_of[int(q.params["source"])]
+            # copy the row out of the [B, n] batch result: a view would
+            # pin the whole batch in memory for the cache's lifetime.
+            # 'stats' is batch-level (BatchIterStats of the shared
+            # iteration loop — per-lane IterStats don't exist on the
+            # fused path); each query gets its own list copy
+            out = {k: (np.array(v[i]) if k != "stats" else list(v))
+                   for k, v in res.items()}
+            self.cache_misses += 1
+            self._cache_put(self._cache_key(q), out)
+            q.result = out
+            self.done.append(q)
+
+    # ---- single-query path (overrides + non-batchable apps) -----------
     def _run_query(self, q: GraphQuery) -> dict:
         from ..apps.bfs import bfs, bfs_program
         from ..apps.cc import cc_program, connected_components
         from ..apps.nibble import nibble
         from ..apps.pagerank import pagerank
         from ..apps.sssp import sssp, sssp_program
+        from ..apps.sssp_parents import (sssp_parents_program,
+                                         sssp_with_parents)
         p = dict(q.params)
         # a query overriding an engine-construction parameter cannot share
         # the server engine (all three are baked in at Engine construction)
-        custom = bool({"mode", "backend", "bw_ratio"} & p.keys())
+        custom = bool(self.ENGINE_KEYS & p.keys())
         mode = p.pop("mode", self.mode)
         backend = p.pop("backend", self.backend)
         bw_ratio = p.pop("bw_ratio", None)
         shared = {"bfs": (bfs, bfs_program), "sssp": (sssp, sssp_program),
-                  "cc": (connected_components, cc_program)}
+                  "cc": (connected_components, cc_program),
+                  "sssp_parents": (sssp_with_parents,
+                                   sssp_parents_program)}
         if q.app in shared:
             app_fn, make_program = shared[q.app]
             if custom:
@@ -369,10 +522,32 @@ class GraphQueryServer:
         self.queue.append(q)
 
     def step(self) -> bool:
+        """One scheduler tick: answer the head query — together with every
+        queued query batchable with it when its app supports batching —
+        consulting the LRU result cache first."""
         if not self.queue:
             return False
-        q = self.queue.pop(0)
-        q.result = self._run_query(q)
+        q = self.queue.popleft()
+        sig = self._batch_sig(q)
+        if sig is not None:
+            batch, rest = [q], []
+            for other in self.queue:
+                if len(batch) < self.max_batch \
+                        and self._batch_sig(other) == sig:
+                    batch.append(other)
+                else:
+                    rest.append(other)
+            self.queue = collections.deque(rest)
+            self._run_batch(batch)
+            return True
+        cached = self._cache_get(self._cache_key(q))
+        if cached is not None:
+            self.cache_hits += 1
+            q.result = cached
+        else:
+            self.cache_misses += 1
+            q.result = self._run_query(q)
+            self._cache_put(self._cache_key(q), q.result)
         self.done.append(q)
         return True
 

@@ -1,13 +1,21 @@
 """Serving: continuous batching equals single-stream decoding; SWA ring
-buffer; SSM/hybrid state caches."""
+buffer; SSM/hybrid state caches; batched multi-source graph-query
+scheduling (fused run_batched batches, pow2 padding, LRU memoization,
+dedicated-engine isolation)."""
+import collections
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.apps import (bfs, bfs_multi, sssp, sssp_multi,
+                        sssp_parents_multi, sssp_with_parents)
+from repro.core.engine import Engine
+from repro.graph import build_layout, rmat
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_lm
-from repro.serve import Request, Server
+from repro.serve import GraphQuery, GraphQueryServer, Request, Server
 from repro.serve.engine import decode_step, init_cache, prefill
 
 CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
@@ -107,3 +115,211 @@ def test_server_other_families(family):
     assert len(done) == 2
     for d in done:
         assert d.out == _single(params, cfg, prompts[d.rid], 4, max_len=32)
+
+
+# ----------------------------------------------------------------------
+# graph-analytics serving: batched multi-source execution
+# ----------------------------------------------------------------------
+
+GRAPH_BACKENDS = ("ref", "pallas-interpret")
+
+
+@pytest.fixture(scope="module")
+def glayout():
+    g = rmat(8, 8, seed=3, weighted=True)
+    return build_layout(g, k=8, edge_tile=64, msg_tile=32)
+
+
+def _sources(layout, b):
+    """b distinct sources spread over the degree distribution."""
+    return [int(s) for s in
+            np.linspace(0, layout.n - 1, b).astype(np.int64)]
+
+
+@pytest.mark.parametrize("backend", GRAPH_BACKENDS)
+def test_bfs_multi_bitexact_16_sources(glayout, backend):
+    """>=16 sources in ONE fused run_batched invocation, bit-exact with
+    the corresponding sequential per-query results."""
+    sources = _sources(glayout, 16)
+    res = bfs_multi(glayout, sources, backend=backend)
+    assert res["level"].shape == (16, glayout.n)
+    for i, s in enumerate(sources):
+        seq = bfs(glayout, source=s, backend=backend)
+        assert np.array_equal(res["level"][i], seq["level"]), s
+        assert np.array_equal(res["parent"][i], seq["parent"]), s
+
+
+@pytest.mark.parametrize("backend", GRAPH_BACKENDS)
+def test_sssp_multi_bitexact_16_sources(glayout, backend):
+    sources = _sources(glayout, 16)
+    res = sssp_multi(glayout, sources, backend=backend)
+    assert res["dist"].shape == (16, glayout.n)
+    for i, s in enumerate(sources):
+        seq = sssp(glayout, source=s, backend=backend)
+        assert np.array_equal(res["dist"][i], seq["dist"]), s
+
+
+def test_sssp_parents_multi_matches_sequential(glayout):
+    sources = _sources(glayout, 4)
+    res = sssp_parents_multi(glayout, sources)
+    for i, s in enumerate(sources):
+        seq = sssp_with_parents(glayout, source=s)
+        assert np.array_equal(res["dist"][i], seq["dist"]), s
+        assert np.array_equal(res["parent"][i], seq["parent"]), s
+
+
+def test_run_batched_freezes_converged_lanes(glayout):
+    """A lane whose frontier drains early must keep its final state while
+    other lanes continue (per-query done masks + lane compaction)."""
+    from repro.apps.bfs import bfs_program
+    eng = Engine(glayout, bfs_program(), mode="dc", backend="ref")
+    # lane 0: an isolated-ish low-degree source; lane 1: high-degree hub
+    deg = glayout.deg
+    lo = int(np.argmin(deg[:glayout.n]))
+    hi = int(np.argmax(deg[:glayout.n]))
+    res = bfs_multi(glayout, [lo, hi], engine=eng)
+    for i, s in enumerate((lo, hi)):
+        seq = bfs(glayout, source=s, backend="ref")
+        assert np.array_equal(res["level"][i], seq["level"])
+
+
+def test_graph_server_batches_queue_into_one_invocation(glayout, monkeypatch):
+    """step() drains all compatible queries into ONE fused run_batched
+    call; non-batchable queries keep their own path."""
+    calls = []
+    orig = Engine.run_batched
+
+    def spy(self, states, frontiers, **kw):
+        calls.append(np.asarray(frontiers).shape[0])
+        return orig(self, states, frontiers, **kw)
+
+    monkeypatch.setattr(Engine, "run_batched", spy)
+    srv = GraphQueryServer(glayout, backend="ref")
+    sources = _sources(glayout, 16)
+    for i, s in enumerate(sources):
+        srv.submit(GraphQuery(i, "bfs", {"source": s}))
+    srv.submit(GraphQuery(90, "pagerank", {"iters": 3}))
+    srv.submit(GraphQuery(91, "sssp", {"source": sources[0]}))
+    done = srv.run()
+    assert len(done) == 18
+    assert calls == [16, 1]          # one fused bfs batch + one sssp batch
+    assert list(srv._engines) == ["bfs", "sssp"]
+    for q in done:
+        if q.app == "bfs":
+            seq = bfs(glayout, source=q.params["source"], backend="ref")
+            assert np.array_equal(q.result["level"], seq["level"])
+
+
+def test_graph_server_pads_batches_to_pow2(glayout):
+    """5 distinct sources -> an 8-lane engine invocation: the per-batch-
+    size jit cache stays logarithmic in the queue depth."""
+    srv = GraphQueryServer(glayout, backend="ref")
+    for i, s in enumerate(_sources(glayout, 5)):
+        srv.submit(GraphQuery(i, "bfs", {"source": s}))
+    srv.run()
+    eng = srv._engines["bfs"]
+    assert ("batched", 8) in eng._step_cache
+    assert not any(k == ("batched", 5) for k in eng._step_cache)
+
+
+def test_graph_server_queue_is_deque_and_batch_aware(glayout):
+    srv = GraphQueryServer(glayout, backend="ref")
+    assert isinstance(srv.queue, collections.deque)
+    s = _sources(glayout, 3)
+    srv.submit(GraphQuery(0, "bfs", {"source": s[0]}))
+    srv.submit(GraphQuery(1, "pagerank", {"iters": 2}))
+    srv.submit(GraphQuery(2, "bfs", {"source": s[1]}))
+    # one tick answers BOTH bfs queries (batch-aware, not FIFO-single)
+    assert srv.step()
+    assert sorted(q.qid for q in srv.done) == [0, 2]
+    assert [q.qid for q in srv.queue] == [1]
+    srv.run()
+    assert sorted(q.qid for q in srv.done) == [0, 1, 2]
+
+
+def test_graph_server_lru_result_cache(glayout):
+    srv = GraphQueryServer(glayout, backend="ref", cache_size=2)
+    s = _sources(glayout, 3)
+    srv.submit(GraphQuery(0, "bfs", {"source": s[0]}))
+    srv.run()
+    assert (srv.cache_hits, srv.cache_misses) == (0, 1)
+    # repeated (app, params) -> served from cache, same result object
+    srv.submit(GraphQuery(1, "bfs", {"source": s[0]}))
+    srv.run()
+    assert (srv.cache_hits, srv.cache_misses) == (1, 1)
+    assert srv.done[1].result is srv.done[0].result
+    # eviction: cache_size=2, three distinct queries -> oldest evicted
+    srv.submit(GraphQuery(2, "bfs", {"source": s[1]}))
+    srv.submit(GraphQuery(3, "bfs", {"source": s[2]}))
+    srv.run()
+    srv.submit(GraphQuery(4, "bfs", {"source": s[0]}))   # evicted: rerun
+    srv.run()
+    assert srv.cache_misses == 4
+    # clear_cache() empties it (the layout-swap invalidation escape hatch)
+    srv.clear_cache()
+    assert len(srv._result_cache) == 0
+
+
+def test_graph_server_dedicated_engine_does_not_poison_cache(glayout):
+    """Queries overriding mode/backend/bw_ratio run on a dedicated engine;
+    the shared engine survives untouched (identity-asserted) and a
+    subsequent plain query reuses it."""
+    srv = GraphQueryServer(glayout, backend="ref")
+    srv.submit(GraphQuery(0, "bfs", {"source": 0}))
+    srv.run()
+    eng = srv._engines["bfs"]
+    srv.submit(GraphQuery(1, "bfs", {"source": 1, "mode": "sc"}))
+    srv.submit(GraphQuery(2, "bfs", {"source": 2, "bw_ratio": 9.0}))
+    srv.submit(GraphQuery(3, "bfs", {"source": 3,
+                                     "backend": "pallas-interpret"}))
+    done = srv.run()
+    assert srv._engines == {"bfs": eng}      # no poisoning, no new entries
+    for q in done[1:]:
+        seq = bfs(glayout, source=q.params["source"])
+        assert np.array_equal(q.result["level"], seq["level"])
+    # a subsequent plain query reuses the shared engine (identity)
+    srv.submit(GraphQuery(4, "bfs", {"source": 4}))
+    srv.run()
+    assert srv._engines["bfs"] is eng
+
+
+def test_graph_server_single_path_only_kwargs_skip_batching(glayout):
+    """Params outside the *_multi signature (use_pallas here) must route
+    to the single-query path instead of crashing the fused batch."""
+    srv = GraphQueryServer(glayout, backend="ref")
+    s = _sources(glayout, 2)
+    srv.submit(GraphQuery(0, "bfs", {"source": s[0], "use_pallas": False}))
+    srv.submit(GraphQuery(1, "bfs", {"source": s[1]}))
+    done = srv.run()
+    assert len(done) == 2
+    for q in done:
+        seq = bfs(glayout, source=q.params["source"])
+        assert np.array_equal(q.result["level"], seq["level"])
+
+
+def test_graph_server_unhashable_params_skip_cache(glayout):
+    """nibble's seeds list is canonicalized to a tuple and cached; a
+    genuinely unhashable param just skips memoization."""
+    srv = GraphQueryServer(glayout, backend="ref")
+    srv.submit(GraphQuery(0, "nibble", {"seeds": [0, 1]}))
+    srv.submit(GraphQuery(1, "nibble", {"seeds": [0, 1]}))
+    srv.run()
+    assert srv.cache_hits == 1               # list params canonicalized
+    assert srv._cache_key(GraphQuery(9, "nibble",
+                                     {"seeds": {0: 1}})) is None
+
+
+def test_bench_serve_smoke(tmp_path):
+    """The serving benchmark emits schema-compatible rows (CI artifact)."""
+    from benchmarks.bench_serve import run as bench_run
+    out = tmp_path / "BENCH_serve.json"
+    doc = bench_run([6], ["ref"], [1, 2], reps=1, k=8, out_path=out)
+    rows = doc["results"]
+    assert rows and out.exists()
+    for r in rows:
+        assert {"kernel", "backend", "monoid", "scale", "wall_s",
+                "batch", "qps"} <= r.keys()
+        assert r["wall_s"] > 0 and r["qps"] > 0
+    kernels = {r["kernel"] for r in rows}
+    assert "serve_bfs_batched_b2" in kernels
+    assert "serve_sssp_seq_b1" in kernels
