@@ -53,7 +53,10 @@ def bfs_multi(layout, sources, backend=None, engine: Engine = None,
     """Batched multi-source BFS: one fused :meth:`Engine.run_batched`
     invocation answers ``len(sources)`` queries, bit-exact with per-source
     :func:`bfs` calls.  Row ``i`` of every result array belongs to
-    ``sources[i]``."""
+    ``sources[i]``.  ``engine`` may also be a
+    :class:`repro.dist.engine.DistEngine` over a sharding of this layout
+    (``D*nv == n_pad``: the global vertex space is identical), in which
+    case the batch advances across the device mesh."""
     sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
     B, n_pad = len(sources), layout.n_pad
     lanes = jnp.arange(B)

@@ -52,7 +52,12 @@ def sssp_multi(layout, sources, backend=None, engine: Engine = None,
                max_iters: int = None):
     """Batched multi-source SSSP: one fused :meth:`Engine.run_batched`
     invocation relaxes ``len(sources)`` queries together, bit-exact with
-    per-source :func:`sssp` calls.  Row ``i`` belongs to ``sources[i]``."""
+    per-source :func:`sssp` calls.  Row ``i`` belongs to ``sources[i]``.
+    ``engine`` may be a :class:`repro.dist.engine.DistEngine` to relax the
+    batch across the device mesh (same vertex space: ``D*nv == n_pad``);
+    note a dist engine built with ``wire_bf16=True`` rounds f32 distances
+    to bf16 on the wire — batched and sequential runs under the SAME wire
+    config still match bit-for-bit."""
     assert layout.weighted, "SSSP needs an edge-weighted graph"
     sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
     B, n_pad = len(sources), layout.n_pad

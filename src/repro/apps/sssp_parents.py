@@ -65,7 +65,9 @@ def sssp_parents_multi(layout, sources, engine: Engine = None,
     """Batched multi-source SSSP with parent tracking (uint64 packed
     monoid, so the gather falls back to the ref kernels — still one fused
     vmapped invocation per iteration).  Row ``i`` belongs to
-    ``sources[i]``."""
+    ``sources[i]``.  A :class:`repro.dist.engine.DistEngine` works as
+    ``engine`` too; its bf16 wire never engages for this monoid (uint64,
+    not f32), so distributed results stay exact."""
     assert layout.weighted, "needs edge weights"
     with jax.experimental.enable_x64():
         sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))

@@ -47,7 +47,7 @@ from .program import VertexProgram
 
 def _tree_where(mask, new, old):
     def sel(a, b):
-        m = mask.reshape(mask.shape + (1,) * (a.ndim - 1))
+        m = mask.reshape(mask.shape + (1,) * (a.ndim - mask.ndim))
         return jnp.where(m, a, b)
     return jax.tree_util.tree_map(sel, new, old)
 
@@ -75,6 +75,63 @@ class BatchIterStats:
     lanes_active: int         # queries still converging this iteration
     n_active: int             # active vertices summed over all lanes
     wall_s: float
+
+
+def _compact_lane_index(lane_act: np.ndarray):
+    """Surviving lane indices packed to the next power-of-two width.
+
+    Padding repeats the first survivor, whose duplicate rows compute
+    identical values, so scattering the packed results back with
+    ``.at[idx].set`` is deterministic; the pow2 width keeps the per-width
+    jit cache at log2(B) entries."""
+    idx_r = np.nonzero(lane_act)[0]
+    W = _next_pow2(len(idx_r))
+    idx = np.concatenate([idx_r, np.full(W - len(idx_r), idx_r[0])])
+    return jnp.asarray(idx, jnp.int32), W
+
+
+def _run_batched_loop(step_for_width, states, active, max_iters: int,
+                      until_empty: bool, collect_stats: bool):
+    """Host-driven batched convergence loop shared by
+    :meth:`Engine.run_batched` and
+    :meth:`repro.dist.engine.DistEngine.run_batched`.
+
+    ``step_for_width(W)`` returns the jitted batched iteration for lane
+    width ``W`` — ``fn(states, active, it) -> (states, active)`` over
+    ``[W, ...]`` leaves.  The *union* frontier drives convergence; between
+    steps converged lanes are compacted out of the batch entirely (packed
+    to pow2 widths via :func:`_compact_lane_index`)."""
+    B = active.shape[0]
+    tmap = jax.tree_util.tree_map
+    stats = []
+    for it in range(max_iters):
+        lane_act = np.asarray(active.any(axis=1))
+        n_lanes = int(lane_act.sum())
+        if n_lanes == 0:
+            if until_empty:
+                break
+            continue    # every phase masks on active: a no-op step
+        t0 = time.perf_counter()
+        n_act = int(jnp.sum(active)) if collect_stats else 0
+        if n_lanes == B:
+            states, active = step_for_width(B)(states, active,
+                                               jnp.int32(it))
+        else:
+            # lane compaction: converged lanes drop out of the batch
+            # instead of riding along as frozen flops
+            idx, W = _compact_lane_index(lane_act)
+            sub_states = tmap(lambda a: a[idx], states)
+            sub_states, sub_active = step_for_width(W)(
+                sub_states, active[idx], jnp.int32(it))
+            states = tmap(lambda f, p: f.at[idx].set(p),
+                          states, sub_states)
+            active = active.at[idx].set(sub_active)
+        jax.block_until_ready(active)
+        if collect_stats:
+            stats.append(BatchIterStats(
+                it=it, lanes_active=n_lanes,
+                n_active=n_act, wall_s=time.perf_counter() - t0))
+    return states, active, stats
 
 
 class Engine:
@@ -347,46 +404,9 @@ class Engine:
         """
         active = jnp.asarray(frontiers, jnp.bool_)
         assert active.ndim == 2, "frontiers must be [B, n_pad]"
-        B = active.shape[0]
         states = jax.tree_util.tree_map(jnp.asarray, states)
-        tmap = jax.tree_util.tree_map
-        stats = []
-        for it in range(max_iters):
-            lane_act = np.asarray(active.any(axis=1))
-            n_lanes = int(lane_act.sum())
-            if n_lanes == 0:
-                if until_empty:
-                    break
-                continue    # every phase masks on active: a no-op step
-            t0 = time.perf_counter()
-            n_act = int(jnp.sum(active)) if collect_stats else 0
-            if n_lanes == B:
-                states, active = self._batched_step_fn(B)(
-                    states, active, jnp.int32(it))
-            else:
-                # lane compaction: converged lanes drop out of the batch
-                # instead of riding along as frozen flops.  The packed
-                # width is the next power of two of the surviving lane
-                # count (padding repeats the first survivor, whose
-                # duplicate rows compute identical values, so the
-                # scatter-back below is deterministic), keeping the
-                # per-width jit cache at log2(B) entries.
-                idx_r = np.nonzero(lane_act)[0]
-                W = _next_pow2(n_lanes)
-                idx = jnp.asarray(np.concatenate(
-                    [idx_r, np.full(W - n_lanes, idx_r[0])]), jnp.int32)
-                sub_states = tmap(lambda a: a[idx], states)
-                sub_states, sub_active = self._batched_step_fn(W)(
-                    sub_states, active[idx], jnp.int32(it))
-                states = tmap(lambda f, p: f.at[idx].set(p),
-                              states, sub_states)
-                active = active.at[idx].set(sub_active)
-            jax.block_until_ready(active)
-            if collect_stats:
-                stats.append(BatchIterStats(
-                    it=it, lanes_active=n_lanes,
-                    n_active=n_act, wall_s=time.perf_counter() - t0))
-        return states, active, stats
+        return _run_batched_loop(self._batched_step_fn, states, active,
+                                 max_iters, until_empty, collect_stats)
 
     # ------------------------------------------------------------------
     def run_fused(self, state, frontier, iters: int):

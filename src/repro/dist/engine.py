@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..backend import registry as kregistry
-from ..core.engine import _tree_where
+from ..core.engine import _run_batched_loop, _tree_where
 from ..core.program import VertexProgram
 from .compat import NamedSharding, PartitionSpec as P, shard_map
 from .sharding import graph_spec
@@ -37,6 +37,100 @@ from .sharding import graph_spec
 
 def _squeeze0(tree):
     return jax.tree_util.tree_map(lambda a: a[0], tree)
+
+
+# ----------------------------------------------------------------------
+# wire compression: what actually crosses the all_to_all
+# ----------------------------------------------------------------------
+
+def _pack_bf16_pairs(vals, ident):
+    """``[..., S]`` bf16 -> ``[..., ceil(S/2)]`` uint32 wire lanes.
+
+    Two bf16 messages bitcast-packed per u32 lane: XLA sinks plain
+    converts through collectives (cancelling the up/down-cast pair, so
+    the wire stays f32 — observed on XLA:CPU); bitcasts cannot be
+    cancelled, so the wire really carries half the bytes.  Odd ``S`` is
+    padded with one identity column first (sliced off after the
+    exchange by :func:`_unpack_bf16_pairs`)."""
+    S = vals.shape[-1]
+    if S % 2:
+        pad = jnp.full(vals.shape[:-1] + (1,), ident, vals.dtype)
+        vals = jnp.concatenate([vals, pad], axis=-1)
+    pairs = vals.reshape(vals.shape[:-1] + ((S + 1) // 2, 2))
+    return jax.lax.bitcast_convert_type(pairs, jnp.uint32)
+
+
+def _unpack_bf16_pairs(packed, S):
+    """Inverse of :func:`_pack_bf16_pairs`: ``[..., P]`` u32 -> ``[..., S]``
+    bf16 (the odd-S identity pad column is discarded)."""
+    v = jax.lax.bitcast_convert_type(packed, jnp.bfloat16)
+    return v.reshape(v.shape[:-2] + (-1,))[..., :S]
+
+
+def _pack_bits(flags):
+    """``[..., S]`` bool -> ``[..., ceil(S/8)]`` uint8 frontier bitmap.
+
+    Validity flags cross the wire 8x smaller than bool lanes (XLA sends
+    one byte per bool).  The pack/unpack pair is shifts and masked sums,
+    which the algebraic simplifier cannot cancel through the collective,
+    so the wire really carries the packed bytes."""
+    S = flags.shape[-1]
+    Sp = -(-S // 8) * 8
+    if Sp != S:
+        pad = jnp.zeros(flags.shape[:-1] + (Sp - S,), jnp.bool_)
+        flags = jnp.concatenate([flags, pad], axis=-1)
+    bits = flags.reshape(flags.shape[:-1] + (Sp // 8, 8)).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint8)
+
+
+def _unpack_bits(packed, S):
+    """Inverse of :func:`_pack_bits`: ``[..., P]`` u8 -> ``[..., S]`` bool."""
+    bits = (packed[..., None] >> jnp.arange(8, dtype=jnp.uint8)) \
+        & jnp.uint8(1)
+    return bits.reshape(bits.shape[:-2] + (-1,))[..., :S] != 0
+
+
+def dc_wire_bytes(meta: dict, value_itemsize: int, *,
+                  compressed: bool = False, wire_bitmap: bool = True,
+                  dense_frontier: bool = False, batch: int = 1) -> int:
+    """Per-step, per-device all_to_all payload bytes of the DC bin
+    exchange (values + validity flags), for benchmark/cost reporting.
+
+    ``compressed`` means the bf16 wire is actually active (``wire_bf16``
+    requested AND the monoid is f32); ``batch`` scales both payloads by
+    the live lane width of a batched step."""
+    S, D = meta["S"], meta["D"]
+    if compressed:
+        val = D * (S + (S % 2)) * 2          # u32 lanes, 2 bf16 each
+    else:
+        val = D * S * value_itemsize
+    if dense_frontier:
+        flags = 0
+    else:
+        flags = D * (-(-S // 8) if wire_bitmap else S)
+    return batch * (val + flags)
+
+
+def _fold_lanes(fold, vals, valid, ids, ns):
+    """Per-lane segmented fold, unrolled over the lane axis at trace time.
+
+    The registry folds have no vmap batching rule (XLA's default scatter
+    batching serializes ~100x on CPU), and flattening lanes into one
+    ``lane * ns + id`` segment space is QUADRATIC in B for the blocked
+    fold — every message block carries a full ``[num_segments]`` partial
+    accumulator, and both the block count and the segment count grow
+    with B (measured 5x slower than B sequential folds at B=16).  The
+    unroll keeps per-lane cost identical to the sequential fold —
+    batching amortizes the collectives and host dispatch, never the fold
+    math — at B extra traced ops per compiled step (bounded: one step
+    per pow2 lane width ever compiles)."""
+    accs, touch = [], []
+    for i in range(vals.shape[0]):
+        a, t = fold(vals[i], valid[i], ids[i], ns)
+        accs.append(a)
+        touch.append(t)
+    return jnp.stack(accs), jnp.stack(touch)
 
 
 def _resolve_fold(program: VertexProgram, backend=None, tile=None, q=None):
@@ -55,15 +149,24 @@ def _resolve_fold(program: VertexProgram, backend=None, tile=None, q=None):
 
 def build_dc_step(program: VertexProgram, meta: dict,
                   axis_names: Sequence[str], dense_frontier: bool = False,
-                  wire_bf16: bool = False, fold=None):
+                  wire_bf16: bool = False, wire_bitmap: bool = False,
+                  fold=None, batched: bool = False):
     """Destination-centric distributed iteration (per-device body).
 
     dense_frontier: the app keeps every vertex active every iteration
     (paper's PageRank) — the validity-flag exchange is constant and is
     skipped entirely, halving the small-payload side of the bin exchange.
     wire_bf16: cast f32 message values to bf16 on the wire (beyond-paper
-    message compression; exact for BFS/CC ids <= 2^24, approximate for
-    float accumulations)."""
+    message compression; a no-op — hence exact — for the integer id
+    monoids of BFS/CC, approximate for float accumulations).  Odd ``S``
+    is handled by padding the packed lane to even length.
+    wire_bitmap: exchange the validity flags as a packed frontier bitmap
+    (8x smaller than bool lanes on the wire, bit-exact).
+    batched: the body carries a leading query-lane axis — state/active
+    arrive as ``[B, nv]`` shards, the bin exchange moves ``[B, D, S]`` in
+    ONE collective per payload, and the gather folds every lane through a
+    single flattened-segment-space fold (:func:`_fold_lanes`), so each
+    scatter/all_to_all/fold launch is amortized across the whole batch."""
     mono = program.monoid
     nv, S, D = meta["nv"], meta["S"], meta["D"]
     weighted = meta["weighted"]
@@ -75,64 +178,79 @@ def build_dc_step(program: VertexProgram, meta: dict,
     # cancelled by XLA's algebraic simplifier (observed), so the narrow
     # dtype must live across the whole exchange
     wdt = jnp.bfloat16 if compress else mono.dtype
+    # all_to_all split/concat axis: the [D] bin axis sits after the
+    # optional lane axis
+    dev_ax = 1 if batched else 0
+
+    def vm(fn, in_axes):
+        return jax.vmap(fn, in_axes=in_axes) if batched else fn
 
     def step(state, active, arrays, it):
-        # state/active: [nv] shard; arrays: per-device slices (leading 1)
+        # state/active: [nv] shard ([B, nv] when batched); arrays:
+        # per-device slices (leading 1)
         A = _squeeze0(arrays)
-        msgs = program.scatter_fn(state).astype(wdt)          # [nv]
+        lead = active.shape[:-1]                              # () or (B,)
+        msgs = vm(program.scatter_fn, 0)(state).astype(wdt)
         ident = jnp.asarray(mono.identity, wdt)
 
         if program.init_fn is not None:
-            st2, keep = program.init_fn(state, it)
+            st2, keep = vm(program.init_fn, (0, None))(state, it)
             state = _tree_where(active, st2, state)
             keep = keep & active
         else:
-            keep = jnp.zeros((nv,), jnp.bool_)
+            keep = jnp.zeros(active.shape, jnp.bool_)
 
         # ---- scatter: fill the bin row (values only) ----
         srcl = A["out_src_local"]                             # [D, S]
-        flag = A["out_valid"] & active[srcl]
-        out_vals = jnp.where(flag, msgs[srcl], ident)
+        flag = A["out_valid"] & active[..., srcl]             # [.., D, S]
+        out_vals = jnp.where(flag, msgs[..., srcl], ident)
 
         # ---- bin exchange (the BSP barrier) ----
         if compress:
-            # two bf16 messages bitcast-packed per u32 lane: XLA sinks
-            # plain converts through collectives (cancelling the pair, wire
-            # stays f32 — observed on XLA:CPU); bitcasts cannot be cancelled,
-            # so the wire really carries half the bytes
-            packed = jax.lax.bitcast_convert_type(
-                out_vals.reshape(D, S // 2, 2), jnp.uint32)
-            recv_p = jax.lax.all_to_all(packed, axes, 0, 0)
-            recv_vals = jax.lax.bitcast_convert_type(
-                recv_p, jnp.bfloat16).reshape(D, S)
+            packed = _pack_bf16_pairs(out_vals, ident)
+            recv_p = jax.lax.all_to_all(packed, axes, dev_ax, dev_ax)
+            recv_vals = _unpack_bf16_pairs(recv_p, S)
         else:
-            recv_vals = jax.lax.all_to_all(out_vals, axes, 0, 0)  # [D, S]
+            recv_vals = jax.lax.all_to_all(out_vals, axes, dev_ax, dev_ax)
         if dense_frontier:
             # validity is static (= out_valid of the sender); the receive
             # side's static in_valid already encodes it
-            rf = jnp.ones((D * S + 1,), jnp.bool_).at[-1].set(False)
+            rf = jnp.ones(lead + (D * S + 1,), jnp.bool_) \
+                .at[..., -1].set(False)
         else:
-            recv_flag = jax.lax.all_to_all(flag, axes, 0, 0)
-            rf = jnp.concatenate([recv_flag.reshape(-1),
-                                  jnp.zeros((1,), jnp.bool_)])
-        rv = jnp.concatenate([recv_vals.reshape(-1),
-                              jnp.full((1,), ident, wdt)])
+            if wire_bitmap:
+                recv_pk = jax.lax.all_to_all(
+                    _pack_bits(flag), axes, dev_ax, dev_ax)
+                recv_flag = _unpack_bits(recv_pk, S)
+            else:
+                recv_flag = jax.lax.all_to_all(flag, axes, dev_ax, dev_ax)
+            rf = jnp.concatenate(
+                [recv_flag.reshape(lead + (D * S,)),
+                 jnp.zeros(lead + (1,), jnp.bool_)], axis=-1)
+        rv = jnp.concatenate(
+            [recv_vals.reshape(lead + (D * S,)),
+             jnp.full(lead + (1,), ident, wdt)], axis=-1)
 
         # ---- gather over the pre-written dc_bin ----
-        ev = rv[A["in_msg_slot"]].astype(mono.dtype)          # [NEd]
-        evalid = rf[A["in_msg_slot"]] & A["in_valid"]
+        slot = A["in_msg_slot"]
+        ev = rv[..., slot].astype(mono.dtype)                 # [.., NEd]
+        evalid = rf[..., slot] & A["in_valid"]
         if program.apply_weight is not None and weighted:
-            ev = program.apply_weight(ev, A["in_w"])
+            ev = vm(program.apply_weight, (0, None))(ev, A["in_w"])
         ev = jnp.where(evalid, ev, mono.identity)
         dst = jnp.where(evalid, A["in_dst_local"], nv)
-        acc, touched = fold(ev, evalid, dst, nv + 1)
-        acc, touched = acc[:nv], touched[:nv]
+        if batched:
+            acc, touched = _fold_lanes(fold, ev, evalid, dst, nv + 1)
+        else:
+            acc, touched = fold(ev, evalid, dst, nv + 1)
+        acc, touched = acc[..., :nv], touched[..., :nv]
 
-        st3, activated = program.apply_fn(state, acc, touched, it)
+        st3, activated = vm(program.apply_fn, (0, 0, 0, None))(
+            state, acc, touched, it)
         state = _tree_where(touched, st3, state)
         new_active = keep | (activated & touched)
         if program.filter_fn is not None:
-            st4, fkeep = program.filter_fn(state, it)
+            st4, fkeep = vm(program.filter_fn, (0, None))(state, it)
             state = _tree_where(new_active, st4, state)
             new_active = new_active & fkeep
         return state, new_active
@@ -357,13 +475,20 @@ class DistEngine:
 
     def __init__(self, sharded, program: VertexProgram, mesh,
                  mode: str = "hybrid", bw_ratio: float = 2.0,
-                 backend=None):
+                 backend=None, wire_bf16: bool = False,
+                 wire_bitmap: bool = True):
         self.sl = sharded
         self.program = program
         self.mesh = mesh
         self.mode = mode
         self.bw_ratio = bw_ratio
         self.axes = tuple(mesh.axis_names)
+        self.wire_bf16 = wire_bf16
+        self.wire_bitmap = wire_bitmap
+        # bf16 wire only engages for f32 monoids; for the integer id
+        # monoids (BFS/CC) it is skipped, so requesting it stays exact
+        self.wire_compressed = (wire_bf16
+                                and program.monoid.dtype == jnp.float32)
         fold, self.backend_name = _resolve_fold(
             program, backend, tile=getattr(sharded, "fold_tile", None),
             q=getattr(sharded, "fold_q", None))
@@ -380,7 +505,9 @@ class DistEngine:
         deg[:len(sharded.deg)] = sharded.deg
         self.deg = jax.device_put(jnp.asarray(deg), shard)
 
-        dc_body = build_dc_step(program, meta, self.axes, fold=fold)
+        dc_body = build_dc_step(program, meta, self.axes, fold=fold,
+                                wire_bf16=wire_bf16,
+                                wire_bitmap=wire_bitmap)
         sc_body = build_sc_step(program, meta, self.axes, fold=fold)
         hy_body = build_hybrid_step(program, meta, self.axes, fold=fold)
 
@@ -403,17 +530,52 @@ class DistEngine:
             )(state, active, arrays, it, dc_mask)
         self._hy = jax.jit(hy_fn)
 
+        # batched DC step: ONE shard_map whose body carries a leading
+        # query-lane axis — the bin exchange moves [B, D, S] per
+        # collective.  jit's shape cache provides the per-width
+        # specializations _run_batched_loop asks for (<= log2(B) of them
+        # thanks to the pow2 lane compaction)
+        dcb_body = build_dc_step(program, meta, self.axes, fold=fold,
+                                 wire_bf16=wire_bf16,
+                                 wire_bitmap=wire_bitmap, batched=True)
+        bspec = P(None, tuple(mesh.axis_names))
+        self._bspec = bspec
+
+        def dcb_fn(states, active, arrays, it):
+            done = ~active.any(axis=1)                         # [B]
+            new_states, new_active = shard_map(
+                dcb_body, mesh=mesh,
+                in_specs=(bspec, bspec, spec_arr, P()),
+                out_specs=(bspec, bspec),
+            )(states, active, arrays, it)
+            # freeze converged lanes (cf. Engine._batched_step_fn): an
+            # empty frontier is already a no-op for every phase, the
+            # explicit freeze makes the contract independent of the
+            # program's init/filter behaviour
+            keep = ~done
+            new_states = _tree_where(keep, new_states, states)
+            new_active = new_active & keep[:, None]
+            return new_states, new_active
+        self._dcb = jax.jit(dcb_fn)
+
         # per-(global)-partition stats for the Eq. 1 per-partition decision;
         # partitions are index-contiguous q-sized ranges, so the segment
         # reduction is a plain reshape-sum (no segment ops anywhere here)
         k_glob = sharded.D * sharded.kpd
         q = sharded.nv // sharded.kpd
+        # overflow-safe accumulation dtype for edge-degree sums: when x64
+        # is off, `astype(jnp.int64)` silently means int32 and an active
+        # degree sum past 2**31 WRAPS, flipping the Eq. 1 decision.
+        # Float never wraps, and its ~1e-7 relative rounding cannot flip
+        # a float threshold comparison
+        fdt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+        deg_f = self.deg.astype(fdt)
 
         @jax.jit
         def _part_stats(active):
             a32 = active.astype(jnp.int32)
             counts = a32.reshape(k_glob, q).sum(axis=1)
-            ea = (a32 * self.deg).reshape(k_glob, q).sum(axis=1)
+            ea = (active.astype(fdt) * deg_f).reshape(k_glob, q).sum(axis=1)
             return counts, ea
         self._pstats = _part_stats
         from ..core.cost import CostModel
@@ -429,8 +591,10 @@ class DistEngine:
 
         @jax.jit
         def _stats(active):
-            return (jnp.sum(active.astype(jnp.int64)),
-                    jnp.sum(active.astype(jnp.int64) * self.deg))
+            # vertex count fits int32 (n < 2**31); the edge-degree sum
+            # does not — accumulate it in float (see fdt above)
+            return (jnp.sum(active.astype(jnp.int32)),
+                    jnp.sum(active.astype(fdt) * deg_f))
         self._stats = _stats
 
         # aggregated Eq. 1 threshold: average DC cost per (all) edge vs the
@@ -442,7 +606,7 @@ class DistEngine:
         r = float(sharded.part_msgs.sum()) / max(L_edges, 1.0)
         self._sc_per_edge = 2 * r * 4 + 3 * 4
 
-    def _choose_dc(self, e_active: int) -> bool:
+    def _choose_dc(self, e_active: float) -> bool:
         if self.mode == "dc":
             return True
         if self.mode == "sc":
@@ -458,7 +622,7 @@ class DistEngine:
         stats = []
         for it in range(max_iters):
             n_act, e_act = self._stats(active)
-            n_act, e_act = int(n_act), int(e_act)
+            n_act, e_act = int(n_act), float(e_act)
             if until_empty and n_act == 0:
                 break
             t0 = time.perf_counter()
@@ -473,7 +637,7 @@ class DistEngine:
                         jnp.asarray(dc_mask),
                         NamedSharding(self.mesh, graph_spec(self.mesh))))
                 jax.block_until_ready(active)
-                stats.append(dict(it=it, n_active=n_act, e_active=e_act,
+                stats.append(dict(it=it, n_active=n_act, e_active=int(e_act),
                                   mode="hybrid_pp",
                                   dc_parts=int(dc_mask.sum()),
                                   sc_parts=int(((~dc_mask)
@@ -484,7 +648,50 @@ class DistEngine:
             fn = self._dc if use_dc else self._sc
             state, active = fn(state, active, self.arrays, jnp.int32(it))
             jax.block_until_ready(active)
-            stats.append(dict(it=it, n_active=n_act, e_active=e_act,
+            stats.append(dict(it=it, n_active=n_act, e_active=int(e_act),
                               mode="dc" if use_dc else "sc",
                               wall_s=time.perf_counter() - t0))
         return state, active, stats
+
+    # ------------------------------------------------------------------
+    def wire_bytes_per_step(self, batch: int = 1) -> int:
+        """Analytic per-device all_to_all payload bytes of one DC step
+        (values + validity flags) under this engine's wire config, for a
+        live lane width of ``batch``."""
+        return dc_wire_bytes(
+            self.meta, np.dtype(self.program.monoid.dtype).itemsize,
+            compressed=self.wire_compressed, wire_bitmap=self.wire_bitmap,
+            batch=batch)
+
+    def run_batched(self, states, frontiers, max_iters: int = 10_000,
+                    until_empty: bool = True, collect_stats: bool = True):
+        """Batched multi-source execution across the mesh: B independent
+        queries of the same vertex program advance together through one
+        batched DC superstep — the bin exchange moves ``[B, D, S]`` in a
+        single all_to_all per payload and the gather folds every lane in
+        one flattened-segment fold, so each collective/fold launch is
+        amortized across the whole batch.
+
+        ``states`` leaves carry a leading query axis ``[B, ...]``;
+        ``frontiers`` is ``[B, D*nv]`` bool over the same global vertex
+        space :meth:`run` uses (``D*nv == n_pad``, so the single-device
+        ``*_multi`` app entry points work unchanged).  The union frontier
+        drives convergence, converged lanes are frozen in-step and
+        compacted out between steps at pow2 widths (shared loop:
+        :func:`repro.core.engine._run_batched_loop`).  DC mode only —
+        batching amortizes launches, while the SC wire advantage shrinks
+        as the batched bins fill; the wire blowup is attacked with
+        ``wire_bf16`` + the packed frontier bitmap instead.  Results are
+        bit-exact with B sequential :meth:`run` calls in ``mode='dc'``
+        under the same wire config."""
+        shard = NamedSharding(self.mesh, self._bspec)
+        states = jax.tree_util.tree_map(
+            lambda a: jax.device_put(jnp.asarray(a), shard), states)
+        active = jax.device_put(jnp.asarray(frontiers, jnp.bool_), shard)
+        assert active.ndim == 2, "frontiers must be [B, D*nv]"
+
+        def step_for_width(W):
+            return lambda s, a, it: self._dcb(s, a, self.arrays, it)
+
+        return _run_batched_loop(step_for_width, states, active,
+                                 max_iters, until_empty, collect_stats)

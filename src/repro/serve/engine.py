@@ -29,6 +29,27 @@ continuous-batching idea to PPM queries over one resident layout:
     :meth:`GraphQueryServer.clear_cache`), never mutating the layout in
     place.  Cached results are returned by reference and must be treated
     as read-only.
+  * **Distributed batching** — constructed with ``sharded=`` (a
+    :func:`repro.graph.shard.shard_layout` of the resident layout) and
+    ``mesh=``, the shared engines become
+    :class:`repro.dist.engine.DistEngine` instances and each drained
+    batch advances across the device mesh through
+    :meth:`~repro.dist.engine.DistEngine.run_batched`: the DC bin
+    exchange carries ``[B, D, S]`` in one all_to_all per payload, so
+    every collective launch is amortized over the batch.  The sharded
+    global vertex space equals the single-device padded space
+    (``D*nv == n_pad``), so batching, pow2 padding, and the LRU cache
+    work unchanged — the cache key stays layout identity, and the same
+    invalidation rule applies.
+  * **Wire compression** (dist only) — the B× blowup of the dense bin
+    exchange is attacked on the wire, not in compute.  Validity flags
+    always cross as a packed frontier bitmap (``wire_bitmap``, 8× smaller
+    than bool lanes, bit-exact).  ``wire_bf16=True`` additionally halves
+    the value payload for f32 monoids; that rounds SSSP distances to bf16
+    on the wire (approximate — but identically for batched and
+    sequential runs under one engine, so parity holds), while integer id
+    monoids (BFS/CC) and the packed uint64 SSSP-parents monoid skip the
+    cast and stay exact.
 """
 from __future__ import annotations
 
@@ -235,6 +256,8 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, *,
 class Request:
     rid: int
     prompt: np.ndarray
+    #: number of DECODE steps; ``out`` ends up ``max_new + 1`` tokens long
+    #: (the prefill-produced token plus one per decode step)
     max_new: int = 32
     out: Optional[list] = None
 
@@ -287,6 +310,14 @@ class Server:
         while self.free and self.queue:
             slot = self.free.pop()
             self._prefill_into_slot(slot, self.queue.popleft())
+        # max_new counts DECODE steps: the prefill-produced token is not
+        # one of them, so a max_new<=0 request finishes right after
+        # prefill and the finish test below discounts that first token
+        # (counting it made every request decode one step short)
+        for slot, req in list(self.active.items()):
+            if len(req.out) - 1 >= req.max_new:
+                self.done.append(self.active.pop(slot))
+                self.free.append(slot)
         if not self.active:
             return False
         toks = jnp.asarray(self._next_tok)
@@ -296,7 +327,7 @@ class Server:
         for slot, req in list(self.active.items()):
             req.out.append(int(nxt[slot]))
             self._next_tok[slot] = int(nxt[slot])
-            if len(req.out) >= req.max_new:
+            if len(req.out) - 1 >= req.max_new:
                 finished.append(slot)
         for slot in finished:
             self.done.append(self.active.pop(slot))
@@ -360,13 +391,25 @@ class GraphQueryServer:
     ENGINE_KEYS = frozenset({"mode", "backend", "bw_ratio"})
 
     def __init__(self, layout, backend=None, mode: str = "hybrid",
-                 max_batch: int = 64, cache_size: int = 128):
+                 max_batch: int = 64, cache_size: int = 128,
+                 sharded=None, mesh=None, wire_bf16: bool = False,
+                 wire_bitmap: bool = True):
+        if (sharded is None) != (mesh is None):
+            raise ValueError("distributed serving needs BOTH sharded and "
+                             "mesh (or neither)")
         self.layout = layout
         self.backend = backend
         self.mode = mode
         self.max_batch = max_batch
         self.cache_size = cache_size
-        self._engines = {}            # app name -> shared Engine
+        #: when set (with ``mesh``), shared engines are
+        #: :class:`repro.dist.engine.DistEngine` instances over the
+        #: sharded layout and batches fan out across the device mesh
+        self.sharded = sharded
+        self.mesh = mesh
+        self.wire_bf16 = wire_bf16
+        self.wire_bitmap = wire_bitmap
+        self._engines = {}            # app name -> shared (Dist)Engine
         self.queue = collections.deque()
         self.done = []
         self._result_cache = collections.OrderedDict()
@@ -377,12 +420,22 @@ class GraphQueryServer:
     def _shared_engine(self, app: str, make_program):
         eng = self._engines.get(app)
         if eng is None:
-            from ..core.engine import Engine
             # engine construction never traces the program (only the app
             # fns do, inside their own enable_x64 for sssp_parents), so
             # no x64 context is needed here
-            eng = Engine(self.layout, make_program(), mode=self.mode,
-                         backend=self.backend)
+            if self.sharded is not None:
+                from ..dist.engine import DistEngine
+                # D*nv == layout.n_pad: the sharded global vertex space
+                # IS the single-device padded space, so the same *_multi
+                # state construction drives the mesh unchanged
+                eng = DistEngine(self.sharded, make_program(), self.mesh,
+                                 mode=self.mode, backend=self.backend,
+                                 wire_bf16=self.wire_bf16,
+                                 wire_bitmap=self.wire_bitmap)
+            else:
+                from ..core.engine import Engine
+                eng = Engine(self.layout, make_program(), mode=self.mode,
+                             backend=self.backend)
             self._engines[app] = eng
         return eng
 

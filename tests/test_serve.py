@@ -45,7 +45,23 @@ def test_continuous_batching_matches_single_stream():
     done = srv.run()
     assert len(done) == 3
     for d in done:
-        assert d.out == _single(params, CFG, prompts[d.rid], 6)
+        # max_new=6 decode steps + the prefill token = 7 tokens
+        assert d.out == _single(params, CFG, prompts[d.rid], 7)
+
+
+def test_max_new_counts_decode_steps_not_prefill_token():
+    """Regression: the prefill-produced token used to count toward
+    max_new, so every request decoded one step fewer than asked."""
+    params, _ = init_lm(CFG, jax.random.PRNGKey(0))
+    prompt = np.arange(5, dtype=np.int32)
+    for max_new in (0, 1, 3):
+        srv = Server(params, CFG, n_slots=1, max_len=64, dtype=jnp.float32)
+        srv.submit(Request(rid=0, prompt=prompt, max_new=max_new))
+        done = srv.run()
+        assert len(done) == 1
+        # prefill token + exactly max_new decode steps
+        assert len(done[0].out) == max_new + 1
+        assert done[0].out == _single(params, CFG, prompt, max_new + 1)
 
 
 def test_slot_reuse():
@@ -114,7 +130,8 @@ def test_server_other_families(family):
     done = srv.run()
     assert len(done) == 2
     for d in done:
-        assert d.out == _single(params, cfg, prompts[d.rid], 4, max_len=32)
+        # max_new=4 decode steps + the prefill token = 5 tokens
+        assert d.out == _single(params, cfg, prompts[d.rid], 5, max_len=32)
 
 
 # ----------------------------------------------------------------------
