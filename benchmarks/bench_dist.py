@@ -38,17 +38,11 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from .common import time_best as _time_best
+from .common import write_telemetry
+
 REPO_ROOT = Path(__file__).resolve().parents[1]
 APPS = ("bfs", "sssp")
-
-
-def _time_best(fn, reps: int) -> float:
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 def _engines(app: str, sharded, mesh, backend):
@@ -139,6 +133,7 @@ def run(scales, batches, reps: int, k: int, out_path: Path, backend=None):
                       f"speedup={walls['seq']/max(walls['batched'],1e-9):.2f}x "
                       f"bytes {raw}->{wb['batched_wire']}",
                       file=sys.stderr)
+    write_telemetry(out_path, results)
     doc = {
         "meta": {
             "platform": jax.default_backend(),

@@ -29,6 +29,8 @@ import jax
 from repro.backend import registry, tuning
 from repro.graph import build_layout, rmat
 
+from .common import write_telemetry
+
 REPO_ROOT = Path(__file__).resolve().parents[1]
 KERNELS = ("gather", "scatter", "spmv", "fold", "fold2")
 
@@ -76,6 +78,7 @@ def run(scales, backends, reps: int, k: int, out_path: Path) -> dict:
                   + (", ".join(f"{r['kernel']}={r['wall_s']*1e3:.3f}ms"
                                for r in rows) or "no supported kernels"),
                   file=sys.stderr)
+    write_telemetry(out_path, results)
     doc = {
         "meta": {
             "platform": platform,

@@ -41,17 +41,11 @@ from repro.backend import registry
 from repro.core.engine import Engine, _next_pow2
 from repro.graph import build_layout, rmat
 
+from .common import time_best as _time_best
+from .common import write_telemetry
+
 REPO_ROOT = Path(__file__).resolve().parents[1]
 APPS = ("bfs", "sssp")
-
-
-def _time_best(fn, reps: int) -> float:
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 def serving_engine(app: str, layout, backend_name: str) -> Engine:
@@ -134,6 +128,7 @@ def run(scales, backends, batches, reps: int, k: int, out_path: Path):
                           f"batched={bat_s*1e3:.1f}ms "
                           f"speedup={seq_s/max(bat_s,1e-9):.2f}x",
                           file=sys.stderr)
+    write_telemetry(out_path, results)
     doc = {
         "meta": {
             "platform": platform,

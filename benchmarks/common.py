@@ -41,6 +41,38 @@ def timed(fn, repeat: int = 3):
     return min(ts)
 
 
+def time_best(fn, reps: int) -> float:
+    """Best-of-reps wall time; compile excluded by the caller's warmup."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def write_telemetry(out_path, results):
+    """Emit one schema'd ``bench_row`` event per result row through the
+    obs JSONL sink into ``<OUT stem>.telemetry.jsonl`` next to the
+    benchmark JSON, and point each row at the sidecar via a
+    ``"telemetry"`` key (``tools/check_obs_schema.py`` validates the
+    sidecar; ``tools/check_bench_regression.py`` matches rows on
+    (kernel, backend, monoid, scale), so the extra key is inert there).
+    Returns the sidecar path."""
+    from pathlib import Path
+
+    from repro.obs.export import JsonlSink
+
+    out_path = Path(out_path)
+    sidecar = out_path.with_suffix(".telemetry.jsonl")
+    sidecar.unlink(missing_ok=True)
+    with JsonlSink(sidecar) as sink:
+        for r in results:
+            sink.emit({"event": "bench_row", "ts": time.time(), **r})
+            r["telemetry"] = sidecar.name
+    return sidecar
+
+
 def emit(rows, header):
     print(",".join(header))
     for r in rows:

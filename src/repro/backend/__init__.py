@@ -78,6 +78,21 @@ Pallas lowerings with identical semantics; there is no silent handoff
 to ``ref`` at any segment count — ``REPRO_KERNEL_BACKEND=ref`` is the
 only way to get the ``jax.ops`` fold.  ``autotune()`` sweeps ``fold_q``
 jointly with ``fold_tile`` via the over-cap ``fold2`` timing row.
+
+Telemetry
+---------
+
+:func:`make_kernels` tags every kernel object it hands out with an
+``_obs_scope`` of the form ``ppm.<kernel>.<backend>`` (e.g.
+``ppm.fold.pallas-interpret``) — the tag is set on the object itself,
+never a wrapper, so geometry introspection like ``kset.fold.q`` keeps
+working.  Each kernel ``__call__`` enters that scope via
+``repro.obs.tracing.kernel_scope`` (a ``jax.named_scope``: trace-time
+metadata only, zero retraces and zero runtime cost), so ``jax.profiler``
+captures — ``repro.obs.trace(path)`` starts one — attribute device time
+to *which kernel under which backend*, the attribution the registry's
+per-call ``ref`` fallback would otherwise blur.  ``REPRO_OBS=0``
+degrades the scope to a ``nullcontext``.  See :mod:`repro.obs`.
 """
 from __future__ import annotations
 

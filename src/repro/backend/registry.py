@@ -211,6 +211,19 @@ def resolve(kernel: str, monoid, dtype=None, platform: Optional[str] = None,
         f"dtype={jnp.dtype(dtype).name} on platform={platform!r}")
 
 
+def _tag_scope(kernel, kname: str, backend_name: str):
+    """Attach the ``jax.named_scope`` path the kernel's ``__call__`` enters
+    (see :mod:`repro.obs.tracing`): profiler captures then attribute
+    device time to ``ppm.<kernel>.<backend>`` regions.  The attribute is
+    set on the kernel object itself — never a wrapper — so introspection
+    like ``kset.fold.q`` keeps working."""
+    try:
+        kernel._obs_scope = f"ppm.{kname}.{backend_name}"
+    except AttributeError:
+        pass                               # e.g. a slotted/builtin callable
+    return kernel
+
+
 @dataclasses.dataclass
 class KernelSet:
     """Layout-bound kernels for one engine, resolved per call."""
@@ -242,13 +255,14 @@ def make_kernels(layout, monoid, backend=None, platform=None,
     if with_spmv:
         vb = resolve("spmv", "add", dtype=jnp.float32, platform=platform,
                      choice=backend)
-        spmv = vb.spmv(layout)
+        spmv = _tag_scope(vb.spmv(layout), "spmv", vb.name)
         names["spmv"] = vb.name
-    return KernelSet(gather=gb.gather(layout, mono),
-                     scatter=sb.scatter(layout, mono),
-                     fold=fb.segment_fold(mono,
-                                          tile=getattr(layout, "fold_tile",
-                                                       None),
-                                          q=getattr(layout, "fold_q",
-                                                    None)),
+    fold = fb.segment_fold(mono,
+                           tile=getattr(layout, "fold_tile", None),
+                           q=getattr(layout, "fold_q", None))
+    return KernelSet(gather=_tag_scope(gb.gather(layout, mono),
+                                       "gather", gb.name),
+                     scatter=_tag_scope(sb.scatter(layout, mono),
+                                        "scatter", sb.name),
+                     fold=_tag_scope(fold, "fold", fb.name),
                      spmv=spmv, names=names)

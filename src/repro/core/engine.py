@@ -30,7 +30,6 @@ predication inside the Pallas kernels skips edge tiles of inactive partitions
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 import warnings
 from typing import Optional, Union
@@ -39,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..backend import registry as kregistry
 from ..graph.layout import Layout
 from .cost import CostModel
@@ -56,25 +56,11 @@ def _next_pow2(x: int) -> int:
     return 1 if x <= 1 else 1 << (int(x - 1).bit_length())
 
 
-@dataclasses.dataclass
-class IterStats:
-    it: int
-    n_active: int
-    e_active: int
-    dc_parts: int
-    sc_parts: int
-    dc_bytes: float
-    sc_bytes: float
-    wall_s: float
-
-
-@dataclasses.dataclass
-class BatchIterStats:
-    """Per-iteration stats of a :meth:`Engine.run_batched` invocation."""
-    it: int
-    lanes_active: int         # queries still converging this iteration
-    n_active: int             # active vertices summed over all lanes
-    wall_s: float
+# the per-iteration stat records now live in the obs schema
+# (repro.obs.schema); these re-exports are the compat shim every
+# existing `from repro.core.engine import IterStats` consumer uses
+IterStats = obs.IterStats
+BatchIterStats = obs.BatchIterStats
 
 
 def _compact_lane_index(lane_act: np.ndarray):
@@ -91,7 +77,9 @@ def _compact_lane_index(lane_act: np.ndarray):
 
 
 def _run_batched_loop(step_for_width, states, active, max_iters: int,
-                      until_empty: bool, collect_stats: bool):
+                      until_empty: bool, collect_stats: bool,
+                      engine_name: str = "core", program: str = "",
+                      wire_bytes_fn=None):
     """Host-driven batched convergence loop shared by
     :meth:`Engine.run_batched` and
     :meth:`repro.dist.engine.DistEngine.run_batched`.
@@ -100,7 +88,15 @@ def _run_batched_loop(step_for_width, states, active, max_iters: int,
     width ``W`` — ``fn(states, active, it) -> (states, active)`` over
     ``[W, ...]`` leaves.  The *union* frontier drives convergence; between
     steps converged lanes are compacted out of the batch entirely (packed
-    to pow2 widths via :func:`_compact_lane_index`)."""
+    to pow2 widths via :func:`_compact_lane_index`).
+
+    Telemetry (``repro.obs``): per-step ``batch_iter`` events and a
+    step-wall histogram when ``collect_stats`` and obs are both on, and a
+    ``lane_compaction`` event whenever converged lanes are repacked.
+    Everything recorded is already host-resident (``lane_act`` drives the
+    loop), so ``collect_stats=False`` adds zero device syncs regardless
+    of the obs switch.  ``wire_bytes_fn(n_lanes)``, when given, prices
+    the step's analytic exchange payload into the event."""
     B = active.shape[0]
     tmap = jax.tree_util.tree_map
     stats = []
@@ -114,12 +110,17 @@ def _run_batched_loop(step_for_width, states, active, max_iters: int,
         t0 = time.perf_counter()
         n_act = int(jnp.sum(active)) if collect_stats else 0
         if n_lanes == B:
+            W = B
             states, active = step_for_width(B)(states, active,
                                                jnp.int32(it))
         else:
             # lane compaction: converged lanes drop out of the batch
             # instead of riding along as frozen flops
             idx, W = _compact_lane_index(lane_act)
+            if obs.enabled():
+                obs.event("lane_compaction", engine=engine_name,
+                          program=program, it=it, lanes_active=n_lanes,
+                          width=W, batch=B)
             sub_states = tmap(lambda a: a[idx], states)
             sub_states, sub_active = step_for_width(W)(
                 sub_states, active[idx], jnp.int32(it))
@@ -127,10 +128,22 @@ def _run_batched_loop(step_for_width, states, active, max_iters: int,
                           states, sub_states)
             active = active.at[idx].set(sub_active)
         jax.block_until_ready(active)
+        wall = time.perf_counter() - t0
         if collect_stats:
             stats.append(BatchIterStats(
-                it=it, lanes_active=n_lanes,
-                n_active=n_act, wall_s=time.perf_counter() - t0))
+                it=it, lanes_active=n_lanes, n_active=n_act, wall_s=wall))
+            if obs.enabled():
+                wire = (int(wire_bytes_fn(n_lanes))
+                        if wire_bytes_fn is not None else None)
+                extra = {} if wire is None else {"wire_bytes": wire}
+                obs.event("batch_iter", engine=engine_name,
+                          program=program, it=it, lanes_active=n_lanes,
+                          n_active=n_act, width=W, wall_s=wall, **extra)
+                obs.observe("engine.batch_step_wall_s", wall,
+                            engine=engine_name, program=program or "?")
+                obs.cost_sample("dc", n_act, wall, it=it, batched=True,
+                                width=W, engine=engine_name,
+                                program=program)
     return states, active, stats
 
 
@@ -341,11 +354,22 @@ class Engine:
             jax.block_until_ready(active)
             if collect_stats:
                 b = self.cost.bytes_for(dc_mask, ea, has_active)
-                stats.append(IterStats(
+                dc_p, sc_p = int(dc_mask.sum()), int(sc_sel.sum())
+                mode_str = ("dc" if sc_p == 0 else
+                            "sc" if dc_p == 0 else "hybrid")
+                st = IterStats(
                     it=it, n_active=n_active, e_active=int(ea.sum()),
-                    dc_parts=int(dc_mask.sum()), sc_parts=int(sc_sel.sum()),
+                    dc_parts=dc_p, sc_parts=sc_p,
                     dc_bytes=b["dc_bytes"], sc_bytes=b["sc_bytes"],
-                    wall_s=time.perf_counter() - t0))
+                    wall_s=time.perf_counter() - t0,
+                    mode=mode_str, program=self.program.name)
+                stats.append(st)
+                # dc_e/sc_e split the active-edge count by stream: pure
+                # dc/sc steps give the online Eq. 1 calibration clean
+                # single-mode (size, time) points
+                obs.record_engine_iter(
+                    "core", st,
+                    dc_e=int(ea[dc_mask].sum()), sc_e=int(ea[sc_sel].sum()))
         return state, active, stats
 
     # ------------------------------------------------------------------
@@ -406,7 +430,9 @@ class Engine:
         assert active.ndim == 2, "frontiers must be [B, n_pad]"
         states = jax.tree_util.tree_map(jnp.asarray, states)
         return _run_batched_loop(self._batched_step_fn, states, active,
-                                 max_iters, until_empty, collect_stats)
+                                 max_iters, until_empty, collect_stats,
+                                 engine_name="core",
+                                 program=self.program.name)
 
     # ------------------------------------------------------------------
     def run_fused(self, state, frontier, iters: int):
@@ -425,4 +451,11 @@ class Engine:
                 return step(st, act, dc_mask, it)
             return jax.lax.fori_loop(0, iters, body, (state, active))
 
-        return loop(state, jnp.asarray(frontier, jnp.bool_))
+        if not obs.enabled():
+            return loop(state, jnp.asarray(frontier, jnp.bool_))
+        t0 = time.perf_counter()
+        out = loop(state, jnp.asarray(frontier, jnp.bool_))
+        jax.block_until_ready(out)
+        obs.event("fused_run", engine="core", program=self.program.name,
+                  iters=iters, wall_s=time.perf_counter() - t0)
+        return out

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..backend import registry as kregistry
 from ..core.engine import _run_batched_loop, _tree_where
 from ..core.program import VertexProgram
@@ -144,7 +145,8 @@ def _resolve_fold(program: VertexProgram, backend=None, tile=None, q=None):
     outside the Pallas set (e.g. the packed uint64 ``min_with_payload``)
     fall back to ``ref`` per call."""
     b = kregistry.resolve("fold", program.monoid, choice=backend)
-    return b.segment_fold(program.monoid, tile=tile, q=q), b.name
+    fold = b.segment_fold(program.monoid, tile=tile, q=q)
+    return kregistry._tag_scope(fold, "fold", b.name), b.name
 
 
 def build_dc_step(program: VertexProgram, meta: dict,
@@ -637,21 +639,46 @@ class DistEngine:
                         jnp.asarray(dc_mask),
                         NamedSharding(self.mesh, graph_spec(self.mesh))))
                 jax.block_until_ready(active)
+                # analytic wire: full DC bin payload for the DC stream +
+                # per-active-edge SC payload of the SC partitions
+                sc_e = float(ea[(~dc_mask) & (counts > 0)].sum())
+                wire = (self.wire_bytes_per_step()
+                        + int(self._sc_per_edge * sc_e))
                 stats.append(dict(it=it, n_active=n_act, e_active=int(e_act),
                                   mode="hybrid_pp",
                                   dc_parts=int(dc_mask.sum()),
                                   sc_parts=int(((~dc_mask)
                                                 & (counts > 0)).sum()),
+                                  wire_bytes=wire,
                                   wall_s=time.perf_counter() - t0))
+                self._record_iter(stats[-1])
                 continue
             use_dc = self._choose_dc(e_act)
             fn = self._dc if use_dc else self._sc
             state, active = fn(state, active, self.arrays, jnp.int32(it))
             jax.block_until_ready(active)
+            wire = (self.wire_bytes_per_step() if use_dc
+                    else int(self._sc_per_edge * e_act))
             stats.append(dict(it=it, n_active=n_act, e_active=int(e_act),
                               mode="dc" if use_dc else "sc",
+                              wire_bytes=wire,
                               wall_s=time.perf_counter() - t0))
+            self._record_iter(stats[-1])
         return state, active, stats
+
+    def _record_iter(self, s: dict):
+        """Telemetry for one distributed step (no-op when obs is off):
+        engine_iter event with the analytic wire bytes, step-wall
+        histogram keyed by mode, and an Eq. 1 cost sample."""
+        if not obs.enabled():
+            return
+        prog = self.program.name
+        obs.event("engine_iter", engine="dist", program=prog, **s)
+        obs.observe("engine.step_wall_s", s["wall_s"], engine="dist",
+                    program=prog or "?", mode=s["mode"])
+        obs.cost_sample(s["mode"], s["e_active"], s["wall_s"], it=s["it"],
+                        engine="dist", program=prog,
+                        wire_bytes=s["wire_bytes"])
 
     # ------------------------------------------------------------------
     def wire_bytes_per_step(self, batch: int = 1) -> int:
@@ -694,4 +721,7 @@ class DistEngine:
             return lambda s, a, it: self._dcb(s, a, self.arrays, it)
 
         return _run_batched_loop(step_for_width, states, active,
-                                 max_iters, until_empty, collect_stats)
+                                 max_iters, until_empty, collect_stats,
+                                 engine_name="dist",
+                                 program=self.program.name,
+                                 wire_bytes_fn=self.wire_bytes_per_step)

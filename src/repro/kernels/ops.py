@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import tracing as obs_tracing
 from . import ref as kref
 from .dc_gather import dc_gather
 from .fold_block import (blocked_segment_fold, default_fold_tile,
@@ -47,15 +48,18 @@ class GatherKernel:
 
     def __call__(self, edge_vals, edge_valid, part_active):
         L = self.L
-        acc, touched = segment_combine(
-            edge_vals, edge_valid, self.edge_dst_local,
-            self.tile_dst_part, self.tile_src_part, self.tile_first,
-            part_active, k=L.k, q=L.q, edge_tile=L.edge_tile,
-            monoid=self.monoid, interpret=self.interpret)
-        # destination partitions with no incoming tiles were never visited
-        acc = jnp.where(self.has_tiles > 0, acc, self.ident)
-        touched = jnp.where(self.has_tiles > 0, touched, 0)
-        return acc.reshape(-1), touched.reshape(-1) > 0
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.gather")):
+            acc, touched = segment_combine(
+                edge_vals, edge_valid, self.edge_dst_local,
+                self.tile_dst_part, self.tile_src_part, self.tile_first,
+                part_active, k=L.k, q=L.q, edge_tile=L.edge_tile,
+                monoid=self.monoid, interpret=self.interpret)
+            # destination partitions with no incoming tiles were never
+            # visited
+            acc = jnp.where(self.has_tiles > 0, acc, self.ident)
+            touched = jnp.where(self.has_tiles > 0, touched, 0)
+            return acc.reshape(-1), touched.reshape(-1) > 0
 
 
 class ScatterKernel:
@@ -74,12 +78,14 @@ class ScatterKernel:
 
     def __call__(self, x_flat, active_flat):
         L = self.L
-        return dc_gather(
-            x_flat.reshape(L.k, L.q),
-            active_flat.astype(jnp.int32).reshape(L.k, L.q),
-            self.png_src_local, self.png_valid, self.png_tile_part,
-            k=L.k, q=L.q, msg_tile=L.msg_tile, monoid=self.monoid,
-            interpret=self.interpret)
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.scatter")):
+            return dc_gather(
+                x_flat.reshape(L.k, L.q),
+                active_flat.astype(jnp.int32).reshape(L.k, L.q),
+                self.png_src_local, self.png_valid, self.png_tile_part,
+                k=L.k, q=L.q, msg_tile=L.msg_tile, monoid=self.monoid,
+                interpret=self.interpret)
 
 
 class SpmvKernel:
@@ -103,13 +109,15 @@ class SpmvKernel:
 
     def __call__(self, x_flat):
         L = self.L
-        y = spmv_block(
-            x_flat.reshape(L.k, L.q), self.edge_src_local,
-            self.edge_dst_local, self.edge_valid, self.edge_w,
-            self.tile_dst_part, self.tile_src_part, self.tile_first,
-            k=L.k, q=L.q, edge_tile=L.edge_tile,
-            weighted=self.edge_w is not None, interpret=self.interpret)
-        return jnp.where(self.has_tiles > 0, y, 0.0).reshape(-1)
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.spmv")):
+            y = spmv_block(
+                x_flat.reshape(L.k, L.q), self.edge_src_local,
+                self.edge_dst_local, self.edge_valid, self.edge_w,
+                self.tile_dst_part, self.tile_src_part, self.tile_first,
+                k=L.k, q=L.q, edge_tile=L.edge_tile,
+                weighted=self.edge_w is not None, interpret=self.interpret)
+            return jnp.where(self.has_tiles > 0, y, 0.0).reshape(-1)
 
 
 class FoldKernel:
@@ -148,17 +156,19 @@ class FoldKernel:
     def __call__(self, vals, valid, ids, num_segments):
         ns = int(num_segments)
         tile = int(self.tile) if self.tile else default_fold_tile()
-        if ns > max_fold_segments():
-            # the flat one-hot block would outgrow VMEM: fold through the
-            # per-bucket sub-accumulators instead (still Pallas, still no
-            # segment/scatter ops in the lowering)
-            q = int(self.q) if self.q else default_fold_q()
-            return two_level_segment_fold(
-                vals, valid, ids, ns, monoid=self.monoid, fold_tile=tile,
-                fold_q=q, interpret=self.interpret)
-        return blocked_segment_fold(
-            vals, valid, ids, ns, monoid=self.monoid,
-            fold_tile=tile, interpret=self.interpret)
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.fold")):
+            if ns > max_fold_segments():
+                # the flat one-hot block would outgrow VMEM: fold through
+                # the per-bucket sub-accumulators instead (still Pallas,
+                # still no segment/scatter ops in the lowering)
+                q = int(self.q) if self.q else default_fold_q()
+                return two_level_segment_fold(
+                    vals, valid, ids, ns, monoid=self.monoid,
+                    fold_tile=tile, fold_q=q, interpret=self.interpret)
+            return blocked_segment_fold(
+                vals, valid, ids, ns, monoid=self.monoid,
+                fold_tile=tile, interpret=self.interpret)
 
 
 class RefFold:
@@ -175,12 +185,14 @@ class RefFold:
 
     def __call__(self, vals, valid, ids, num_segments):
         mono = self.monoid
-        valid = valid.astype(bool)
-        vals = jnp.where(valid, vals.astype(mono.dtype), mono.identity)
-        acc = mono.segment_fold(vals, ids, num_segments)
-        touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
-                                      num_segments=num_segments) > 0
-        return acc, touched
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.fold.ref")):
+            valid = valid.astype(bool)
+            vals = jnp.where(valid, vals.astype(mono.dtype), mono.identity)
+            acc = mono.segment_fold(vals, ids, num_segments)
+            touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
+                                          num_segments=num_segments) > 0
+            return acc, touched
 
 
 class RefGather:
@@ -213,7 +225,9 @@ class RefGather:
         self._call = call
 
     def __call__(self, edge_vals, edge_valid, part_active):
-        return self._call(edge_vals, edge_valid, part_active)
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.gather.ref")):
+            return self._call(edge_vals, edge_valid, part_active)
 
     def _single(self, edge_vals, edge_valid, part_active):
         mono = self.monoid
@@ -275,9 +289,12 @@ class RefScatter:
 
     def __call__(self, x_flat, active_flat):
         mono = self.monoid
-        src = jnp.minimum(self.png_src, self.n_pad - 1)
-        ok = self.png_valid & (active_flat.astype(bool)[src])
-        return jnp.where(ok, x_flat.astype(mono.dtype)[src], mono.identity)
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.scatter.ref")):
+            src = jnp.minimum(self.png_src, self.n_pad - 1)
+            ok = self.png_valid & (active_flat.astype(bool)[src])
+            return jnp.where(ok, x_flat.astype(mono.dtype)[src],
+                             mono.identity)
 
 
 class RefSpmv:
@@ -295,9 +312,11 @@ class RefSpmv:
                        else None)
 
     def __call__(self, x_flat):
-        return kref.spmv_block_ref(
-            x_flat, self.msg_slot, self.png_src, self.edge_dst,
-            self.edge_valid, self.edge_w, self.n_pad)
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.spmv.ref")):
+            return kref.spmv_block_ref(
+                x_flat, self.msg_slot, self.png_src, self.edge_dst,
+                self.edge_valid, self.edge_w, self.n_pad)
 
 
 def make_kernels(layout, monoid, backend=None, platform=None,

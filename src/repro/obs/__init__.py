@@ -1,0 +1,99 @@
+"""repro.obs — unified telemetry for engines, kernels, and the serving
+tier.
+
+GPOP's efficiency claims are *measured* claims: the Eq. 1 hybrid mode
+decision and the paper's traffic tables exist because the runtime knows
+per-partition active counts, degrees, and communication volumes every
+iteration.  This package is where those signals live instead of dying at
+the call site: a dependency-free metrics registry (counters, gauges,
+log-bucketed histograms with p50/p95/p99), a schema'd JSONL event
+stream, per-step cost samples for online Eq. 1 calibration, kernel
+named-scope tracing, and Prometheus/JSONL exporters.
+
+Environment knobs
+-----------------
+
+``REPRO_OBS``
+    Master switch.  Unset or truthy -> telemetry ON (the default: the
+    recording paths are host-side appends on data the engines already
+    hold, never extra device syncs).  ``REPRO_OBS=0`` (also ``false`` /
+    ``off`` / ``no``) disables every recording entry point behind a
+    single attribute test — no metric objects are created, no events are
+    buffered, traced computations are unchanged (no retraces), and the
+    measured wall overhead on the serving benchmark is <1%.
+    ``set_enabled()`` / ``override_enabled()`` flip it at runtime.
+
+``REPRO_OBS_SINK``
+    Optional path.  When set, every event the default registry records
+    is also streamed to this file as one JSON line (append mode,
+    flushed per event) — the artifact ``tools/check_obs_schema.py``
+    validates and ``tools/obs_report.py`` renders.
+
+What gets recorded
+------------------
+
+* **Engines** — ``Engine.run`` / ``run_batched`` / ``run_fused`` and
+  ``DistEngine.run`` / ``run_batched`` emit per-iteration events
+  (mode decision, dc/sc partition counts, active vertex/edge counts,
+  modeled or analytic wire bytes, step wall time), step-wall
+  histograms keyed by mode, lane-compaction events on the batched
+  paths, and ``(mode, active-edge count, wall seconds)``
+  **cost samples** — read them back with :func:`cost_samples`; they are
+  exactly the table an online Eq. 1 calibration fits.
+* **Kernels** — every registry-constructed scatter/gather/fold/spmv
+  call runs under a ``jax.named_scope`` tagged with the kernel and
+  backend name, so a ``jax.profiler.trace()`` capture (see
+  :func:`trace`) attributes device time to PPM phases.
+* **Serving tier** — ``GraphQueryServer`` and the LM ``Server`` record
+  queue depth, fused-batch/drain sizes, LRU hit/miss counters (labeled
+  by layout identity, so hit rates never aggregate across incompatible
+  layouts), and end-to-end query latency histograms.
+
+Quick use::
+
+    from repro import obs
+    obs.reset()
+    bfs(layout, source=0)
+    for mode, size, wall in obs.cost_samples():
+        ...                                   # Eq. 1 calibration input
+    print(obs.export.prometheus_text())
+    obs.export.write_jsonl("events.jsonl")
+"""
+from __future__ import annotations
+
+from . import export, schema, tracing
+from .metrics import (Counter, Gauge, Histogram, Registry, cost_sample,
+                      cost_samples, counter, enabled, event, events, gauge,
+                      histogram, inc, observe, override_enabled, registry,
+                      reset, set_enabled, set_gauge, snapshot)
+from .schema import BatchIterStats, EVENT_SCHEMA, IterStats, validate_event
+from .tracing import annotation, kernel_scope, trace
+
+__all__ = [
+    "export", "schema", "tracing",
+    "Counter", "Gauge", "Histogram", "Registry",
+    "cost_sample", "cost_samples", "counter", "enabled", "event",
+    "events", "gauge", "histogram", "inc", "observe", "override_enabled",
+    "registry", "reset", "set_enabled", "set_gauge", "snapshot",
+    "BatchIterStats", "EVENT_SCHEMA", "IterStats", "validate_event",
+    "annotation", "kernel_scope", "trace",
+    "record_engine_iter",
+]
+
+
+def record_engine_iter(engine: str, st: IterStats, wire_bytes=None,
+                       **extra):
+    """Record one engine iteration: JSONL event + step-wall histogram +
+    Eq. 1 cost sample.  A no-op when telemetry is disabled; every value
+    is host-resident already (no device syncs)."""
+    if not enabled():
+        return
+    d = schema.as_event(st)
+    if wire_bytes is not None:
+        d["wire_bytes"] = int(wire_bytes)
+    d.update(extra)
+    event("engine_iter", engine=engine, **d)
+    observe("engine.step_wall_s", st.wall_s, engine=engine,
+            program=st.program or "?", mode=st.mode or "?")
+    cost_sample(st.mode or "?", st.e_active, st.wall_s, it=st.it,
+                engine=engine, program=st.program)

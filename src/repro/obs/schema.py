@@ -1,0 +1,148 @@
+"""Telemetry schema: the per-iteration stat records and the JSONL event
+contract.
+
+``IterStats`` / ``BatchIterStats`` are the engine-facing per-iteration
+records (they lived in :mod:`repro.core.engine` before the obs layer
+existed; the engine re-exports them as a compat shim, so every existing
+``res["stats"][i].dc_bytes`` consumer keeps working).  ``as_event``
+turns one into the dict the JSONL sink ships.
+
+``EVENT_SCHEMA`` is the machine-checkable contract for every event type
+the repo emits: per event, the required fields and their types.  Extra
+fields are always allowed (events are forward-extensible); missing or
+mistyped required fields are a schema violation.
+``tools/obs_schema.json`` is the checked-in serialization of this dict
+(``tools/check_obs_schema.py`` validates exported JSONL against it
+without importing the repo; a test asserts the two never diverge).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class IterStats:
+    """Per-iteration record of an :meth:`Engine.run` invocation."""
+    it: int
+    n_active: int
+    e_active: int
+    dc_parts: int
+    sc_parts: int
+    dc_bytes: float
+    sc_bytes: float
+    wall_s: float
+    #: effective step mode ('dc' / 'sc' / 'hybrid'); optional for
+    #: backward compatibility with pre-obs constructors
+    mode: str = ""
+    #: vertex-program name, for grouping a multi-app run's telemetry
+    program: str = ""
+
+
+@dataclasses.dataclass
+class BatchIterStats:
+    """Per-iteration stats of a :meth:`Engine.run_batched` invocation."""
+    it: int
+    lanes_active: int         # queries still converging this iteration
+    n_active: int             # active vertices summed over all lanes
+    wall_s: float
+
+
+def as_event(stats) -> dict:
+    return dataclasses.asdict(stats)
+
+
+# ----------------------------------------------------------------------
+# event contract
+# ----------------------------------------------------------------------
+
+#: every event implicitly carries {"event": str, "ts": float}
+EVENT_SCHEMA = {
+    "version": 1,
+    "events": {
+        # one engine iteration (single-device or distributed); dist steps
+        # add wire_bytes (analytic all_to_all payload)
+        "engine_iter": {
+            "required": {"engine": "str", "program": "str", "it": "int",
+                         "mode": "str", "n_active": "int",
+                         "e_active": "int", "wall_s": "float"},
+        },
+        # one batched (multi-source) engine step
+        "batch_iter": {
+            "required": {"engine": "str", "program": "str", "it": "int",
+                         "lanes_active": "int", "width": "int",
+                         "wall_s": "float"},
+        },
+        # converged lanes compacted out of a batch (pow2 repack)
+        "lane_compaction": {
+            "required": {"engine": "str", "program": "str", "it": "int",
+                         "lanes_active": "int", "width": "int",
+                         "batch": "int"},
+        },
+        # a fully-jitted fixed-iteration loop (Engine.run_fused)
+        "fused_run": {
+            "required": {"engine": "str", "program": "str", "iters": "int",
+                         "wall_s": "float"},
+        },
+        # one fused serve-tier batch answered by run_batched
+        "serve_batch": {
+            "required": {"app": "str", "layout": "str", "batch": "int",
+                         "distinct_sources": "int", "width": "int",
+                         "wall_s": "float"},
+        },
+        # one query answered on the single-query path
+        "serve_query": {
+            "required": {"app": "str", "layout": "str", "cached": "bool",
+                         "wall_s": "float"},
+        },
+        # LRU result cache dropped (same-layout invalidation escape hatch)
+        "cache_clear": {
+            "required": {"layout": "str"},
+        },
+        # server re-pointed at a new resident layout
+        "layout_swap": {
+            "required": {"old": "str", "new": "str"},
+        },
+        # one benchmark row (per-row timings from benchmarks/*)
+        "bench_row": {
+            "required": {"kernel": "str", "backend": "str",
+                         "wall_s": "float"},
+        },
+    },
+}
+
+#: JSON type tags -> python type tuples accepted by the validator
+TYPE_TAGS = {
+    "str": (str,),
+    "int": (int,),
+    "float": (int, float),        # ints are acceptable floats
+    "bool": (bool,),
+}
+
+
+def validate_event(rec: dict, schema: dict = None):
+    """Return a list of violation strings for one event dict (empty when
+    valid).  Unknown event types and missing/mistyped required fields are
+    violations; extra fields are not."""
+    schema = EVENT_SCHEMA if schema is None else schema
+    errs = []
+    ev = rec.get("event")
+    if not isinstance(ev, str):
+        return ["missing/invalid 'event' field"]
+    spec = schema["events"].get(ev)
+    if spec is None:
+        return [f"unknown event type {ev!r}"]
+    if not isinstance(rec.get("ts"), (int, float)):
+        errs.append(f"{ev}: missing/invalid 'ts'")
+    for field, tag in spec["required"].items():
+        if field not in rec:
+            errs.append(f"{ev}: missing required field {field!r}")
+            continue
+        ok_types = TYPE_TAGS[tag]
+        v = rec[field]
+        # bool is an int subclass: reject it where an int/float is asked
+        if isinstance(v, bool) and tag in ("int", "float"):
+            errs.append(f"{ev}: field {field!r} expected {tag}, got bool")
+        elif not isinstance(v, ok_types):
+            errs.append(f"{ev}: field {field!r} expected {tag}, "
+                        f"got {type(v).__name__}")
+    return errs

@@ -1,0 +1,58 @@
+"""Kernel/phase tracing: named scopes for jit traces and on-demand
+profiler captures.
+
+``kernel_scope`` is what the kernel wrappers in :mod:`repro.kernels.ops`
+enter around their bodies: under an active ``jax.profiler.trace()``
+capture (or any XLA dump) the scatter / gather / fold phases then show up
+as named regions instead of anonymous fusions.  ``jax.named_scope`` adds
+trace-time metadata only — no ops, no retraces, zero runtime cost — and
+is skipped entirely when telemetry is disabled.
+
+``annotation`` is the host-side counterpart (``TraceAnnotation``): wrap a
+host region (a scheduler tick, a drain) so it is attributable in the
+same profile.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+from . import metrics
+
+_NULL = contextlib.nullcontext()
+
+
+def kernel_scope(name: str):
+    """``jax.named_scope(name)`` when telemetry is enabled, else a
+    no-op context.  Safe inside jit traces and shard_map bodies."""
+    if not metrics.enabled():
+        return _NULL
+    return jax.named_scope(name)
+
+
+def annotation(name: str):
+    """Host-side profiler annotation (TraceAnnotation) when enabled."""
+    if not metrics.enabled():
+        return _NULL
+    try:
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:                         # profiler unavailable
+        return _NULL
+
+
+@contextlib.contextmanager
+def trace(path):
+    """Capture a profiled region into ``path`` (TensorBoard/XPlane trace
+    directory) — wrap one engine iteration to attribute its kernels:
+
+        with obs.trace("/tmp/ppm-trace"):
+            engine.run(state, frontier, max_iters=1, until_empty=False)
+
+    Runs regardless of ``REPRO_OBS`` — an explicit capture request.
+    """
+    jax.profiler.start_trace(str(path))
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

@@ -55,12 +55,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..models import moe as moe_lib
 from ..models import ssm as ssm_lib
 from ..models.config import ModelConfig
@@ -307,9 +309,16 @@ class Server:
 
     def step(self):
         """One scheduler tick: admit new requests, then decode one token."""
+        admitted = 0
         while self.free and self.queue:
             slot = self.free.pop()
             self._prefill_into_slot(slot, self.queue.popleft())
+            admitted += 1
+        if obs.enabled():
+            obs.set_gauge("serve.lm_queue_depth", len(self.queue))
+            obs.set_gauge("serve.lm_active_slots", len(self.active))
+            if admitted:
+                obs.inc("serve.lm_admitted", admitted)
         # max_new counts DECODE steps: the prefill-produced token is not
         # one of them, so a max_new<=0 request finishes right after
         # prefill and the finish test below discounts that first token
@@ -321,8 +330,14 @@ class Server:
         if not self.active:
             return False
         toks = jnp.asarray(self._next_tok)
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(self.params, toks, self.cache)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        if obs.enabled():
+            # argmax already synced; one token per *active* slot this tick
+            obs.inc("serve.lm_tokens", len(self.active))
+            obs.observe("serve.lm_decode_wall_s",
+                        time.perf_counter() - t0)
         finished = []
         for slot, req in list(self.active.items()):
             req.out.append(int(nxt[slot]))
@@ -415,6 +430,10 @@ class GraphQueryServer:
         self._result_cache = collections.OrderedDict()
         self.cache_hits = 0
         self.cache_misses = 0
+        # metric series are labeled by layout identity: hit rates and
+        # latencies must never aggregate across incompatible layouts
+        # (cache keys are layout-identity too — same invalidation rule)
+        self._layout_tag = f"{id(layout):#x}"
 
     # ---- shared engines ------------------------------------------------
     def _shared_engine(self, app: str, make_program):
@@ -468,8 +487,54 @@ class GraphQueryServer:
         while len(self._result_cache) > self.cache_size:
             self._result_cache.popitem(last=False)
 
+    def _note_cache(self, hit: bool, app: str):
+        if hit:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+        if obs.enabled():
+            obs.inc("serve.cache_hits" if hit else "serve.cache_misses",
+                    layout=self._layout_tag, app=app)
+
+    def _reset_layout_metrics(self):
+        """Drop this layout's metric series along with the hit/miss ints:
+        a cleared (or swapped-out) cache must not keep feeding hit-rate
+        gauges computed against a different cache population."""
+        self.cache_hits = 0
+        self.cache_misses = 0
+        if obs.enabled():
+            reg = obs.registry()
+            for name in ("serve.cache_hits", "serve.cache_misses",
+                         "serve.query_wall_s", "serve.batch_wall_s"):
+                reg.reset_metric(name, layout=self._layout_tag)
+
     def clear_cache(self):
         self._result_cache.clear()
+        self._reset_layout_metrics()
+        if obs.enabled():
+            obs.event("cache_clear", layout=self._layout_tag)
+
+    def swap_layout(self, layout, sharded=None, mesh=None):
+        """Re-point the server at a new resident layout.
+
+        Every cached result and shared engine is keyed on layout identity,
+        so both are dropped wholesale; the metric series of the old layout
+        are reset too (hit ratios across incompatible layouts are
+        meaningless).  The new layout gets a fresh identity tag, so its
+        series start clean."""
+        if (sharded is None) != (mesh is None):
+            raise ValueError("distributed serving needs BOTH sharded and "
+                             "mesh (or neither)")
+        old = self._layout_tag
+        self._result_cache.clear()
+        self._engines = {}
+        self._reset_layout_metrics()
+        self.layout = layout
+        self.sharded = sharded
+        self.mesh = mesh
+        self._layout_tag = f"{id(layout):#x}"
+        if obs.enabled():
+            obs.event("layout_swap", old=old, new=self._layout_tag)
 
     # ---- batching ------------------------------------------------------
     def _batch_sig(self, q: GraphQuery):
@@ -496,7 +561,11 @@ class GraphQueryServer:
         for q in batch:
             cached = self._cache_get(self._cache_key(q))
             if cached is not None:
-                self.cache_hits += 1
+                self._note_cache(True, q.app)
+                if obs.enabled():
+                    obs.event("serve_query", app=q.app,
+                              layout=self._layout_tag, cached=True,
+                              wall_s=0.0)
                 q.result = cached
                 self.done.append(q)
             else:
@@ -516,7 +585,20 @@ class GraphQueryServer:
         sources += [sources[0]] * (_next_pow2(len(sources)) - len(sources))
         extra = {k: v for k, v in run[0].params.items() if k != "source"}
         eng = self._shared_engine(app, make_program)
+        t0 = time.perf_counter()
         res = multi_fn(self.layout, sources, engine=eng, **extra)
+        wall = time.perf_counter() - t0
+        if obs.enabled():
+            obs.event("serve_batch", app=app, layout=self._layout_tag,
+                      batch=len(run), distinct_sources=len(lane_of),
+                      width=len(sources), wall_s=wall)
+            obs.observe("serve.batch_wall_s", wall, app=app,
+                        layout=self._layout_tag)
+            # per-query end-to-end latency of a fused batch is the batch
+            # wall: every lane waits for the union frontier to drain
+            for _ in run:
+                obs.observe("serve.query_wall_s", wall, app=app,
+                            layout=self._layout_tag)
         for q in run:
             i = lane_of[int(q.params["source"])]
             # copy the row out of the [B, n] batch result: a view would
@@ -526,7 +608,7 @@ class GraphQueryServer:
             # fused path); each query gets its own list copy
             out = {k: (np.array(v[i]) if k != "stats" else list(v))
                    for k, v in res.items()}
-            self.cache_misses += 1
+            self._note_cache(False, q.app)
             self._cache_put(self._cache_key(q), out)
             q.result = out
             self.done.append(q)
@@ -573,6 +655,9 @@ class GraphQueryServer:
 
     def submit(self, q: GraphQuery):
         self.queue.append(q)
+        if obs.enabled():
+            obs.set_gauge("serve.queue_depth", len(self.queue),
+                          layout=self._layout_tag)
 
     def step(self) -> bool:
         """One scheduler tick: answer the head query — together with every
@@ -591,16 +676,33 @@ class GraphQueryServer:
                 else:
                     rest.append(other)
             self.queue = collections.deque(rest)
+            if obs.enabled():
+                obs.set_gauge("serve.queue_depth", len(self.queue),
+                              layout=self._layout_tag)
             self._run_batch(batch)
             return True
         cached = self._cache_get(self._cache_key(q))
         if cached is not None:
-            self.cache_hits += 1
+            self._note_cache(True, q.app)
+            if obs.enabled():
+                obs.event("serve_query", app=q.app,
+                          layout=self._layout_tag, cached=True, wall_s=0.0)
             q.result = cached
         else:
-            self.cache_misses += 1
+            self._note_cache(False, q.app)
+            t0 = time.perf_counter()
             q.result = self._run_query(q)
+            wall = time.perf_counter() - t0
+            if obs.enabled():
+                obs.event("serve_query", app=q.app,
+                          layout=self._layout_tag, cached=False,
+                          wall_s=wall)
+                obs.observe("serve.query_wall_s", wall, app=q.app,
+                            layout=self._layout_tag)
             self._cache_put(self._cache_key(q), q.result)
+        if obs.enabled():
+            obs.set_gauge("serve.queue_depth", len(self.queue),
+                          layout=self._layout_tag)
         self.done.append(q)
         return True
 
