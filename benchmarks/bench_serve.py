@@ -17,6 +17,17 @@ batch size) the harness times
                   :meth:`Engine.run_batched` invocation (the compiled DC
                   iteration vmapped over the query axis).
 
+A second sweep measures the semantic cache on Zipf repeat-source traffic
+(the skewed query mix the warmer targets), on a *symmetrized* copy of
+the graph (landmark seeding's precondition):
+
+  * ``cold``    — a ``semantic=False`` server receives the stream with
+                  its result cache cleared first (every distinct source
+                  is computed), and
+  * ``warmed``  — a semantic server that has already served the source
+                  pool once (landmarks + exact results resident) gets
+                  the same stream.
+
 Rows land in ``BENCH_serve.json`` at the repo root with the same schema as
 ``BENCH_kernels.json`` (batch size encoded in the kernel name, e.g.
 ``serve_bfs_batched_b8``), so ``tools/check_bench_regression.py`` gates
@@ -39,7 +50,7 @@ from repro.apps.bfs import bfs_program
 from repro.apps.sssp import sssp_program
 from repro.backend import registry
 from repro.core.engine import Engine, _next_pow2
-from repro.graph import build_layout, rmat
+from repro.graph import build_layout, rmat, symmetrize
 
 from .common import time_best as _time_best
 from .common import write_telemetry
@@ -73,6 +84,43 @@ def bench_app(app: str, layout, eng: Engine, sources, reps: int):
 
     seq(); batched()                       # warmup: compile both paths
     return _time_best(seq, reps), _time_best(batched, reps)
+
+
+def bench_semantic(app: str, layout, B: int, reps: int):
+    """(cold_wall, warmed_wall, n_queries) for one Zipf repeat-source
+    stream served at ``max_batch=B``.  The warmed server has the 8-source
+    pool resident (exact results + captured landmark state) before the
+    clock starts; the cold server re-computes it every call."""
+    from repro.serve import GraphQuery, GraphQueryServer, ServeConfig
+
+    rng = np.random.default_rng(11)
+    pool = rng.integers(0, layout.n, 8)
+    stream = [int(pool[min(rng.zipf(1.5) - 1, len(pool) - 1)])
+              for _ in range(max(16, 2 * B))]
+    qid = iter(range(1 << 20))
+
+    def drain(srv, sources):
+        for s in sources:
+            srv.submit(GraphQuery(qid=next(qid), app=app,
+                                  params={"source": s}))
+        srv.run()
+
+    cold_srv = GraphQueryServer(layout, ServeConfig(semantic=False,
+                                                    max_batch=B))
+
+    def cold():
+        cold_srv.clear_cache()
+        drain(cold_srv, stream)
+
+    warm_srv = GraphQueryServer(layout, ServeConfig(max_batch=B,
+                                                    cache_size=256))
+    drain(warm_srv, [int(s) for s in pool])     # warm the pool
+
+    def warmed():
+        drain(warm_srv, stream)
+
+    cold(); warmed()                            # warmup: compile both
+    return _time_best(cold, reps), _time_best(warmed, reps), len(stream)
 
 
 def _serving_layout(g, k: int):
@@ -128,6 +176,30 @@ def run(scales, backends, batches, reps: int, k: int, out_path: Path):
                           f"batched={bat_s*1e3:.1f}ms "
                           f"speedup={seq_s/max(bat_s,1e-9):.2f}x",
                           file=sys.stderr)
+        # semantic-cache sweep on the symmetrized graph (the seeding
+        # precondition); only the platform-default backend — the server
+        # resolves its own engines, the env override in the pallas CI leg
+        # would redirect them anyway
+        gs = symmetrize(g)
+        lays = _serving_layout(gs, k)
+        for app in APPS:
+            for B in batches:
+                cold_s, warm_s, Q = bench_semantic(app, lays, B, reps)
+                for variant, wall in (("cold", cold_s),
+                                      ("warmed", warm_s)):
+                    results.append({
+                        "kernel": f"serve_{app}_{variant}_b{B}",
+                        "monoid": "min",
+                        "backend": registry.default_backend_name(
+                            kernel="gather"),
+                        "scale": scale, "n": int(gs.n), "m": int(gs.m),
+                        "batch": B, "wall_s": wall,
+                        "qps": Q / max(wall, 1e-9),
+                    })
+                print(f"scale={scale} app={app} B={B}: "
+                      f"cold={cold_s*1e3:.1f}ms warmed={warm_s*1e3:.1f}ms "
+                      f"warm-speedup={cold_s/max(warm_s,1e-9):.2f}x",
+                      file=sys.stderr)
     write_telemetry(out_path, results)
     doc = {
         "meta": {

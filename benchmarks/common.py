@@ -6,6 +6,7 @@ import time
 import numpy as np
 
 from repro.graph import build_layout, from_edges, rmat
+from repro.graph import symmetrize as _graph_symmetrize
 
 DEFAULT_SCALE = 12      # 4k vertices / 64k edges: CPU-budget default
 
@@ -26,9 +27,10 @@ def layout_for(g, k: int = 32):
 
 
 def symmetrize(g):
-    src = np.repeat(np.arange(g.n), g.out_degrees())
-    return from_edges(np.concatenate([src, g.indices]),
-                      np.concatenate([g.indices, src]), n=g.n, dedup=True)
+    """Delegates to :func:`repro.graph.symmetrize`, which also
+    canonicalizes weights (one weight per unordered pair) — the form the
+    serve tier's landmark seeding requires."""
+    return _graph_symmetrize(g)
 
 
 def timed(fn, repeat: int = 3):

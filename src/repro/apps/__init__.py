@@ -1,4 +1,5 @@
-from .bfs import bfs, bfs_multi, bfs_program
+from .bfs import (bfs, bfs_multi, bfs_program, bfs_seeded_multi,
+                  bfs_seeded_pack, bfs_seeded_program)
 from .pagerank import pagerank, pagerank_program
 from .sssp import sssp, sssp_multi, sssp_program
 from .cc import connected_components, cc_program
@@ -9,7 +10,8 @@ from .heat_kernel import heat_kernel_pr, heat_kernel_program
 from .pagerank_nibble import pagerank_nibble, pagerank_nibble_program
 
 __all__ = [
-    "bfs", "bfs_multi", "bfs_program", "pagerank", "pagerank_program",
+    "bfs", "bfs_multi", "bfs_program", "bfs_seeded_multi",
+    "bfs_seeded_pack", "bfs_seeded_program", "pagerank", "pagerank_program",
     "sssp", "sssp_multi", "sssp_program", "connected_components",
     "cc_program", "nibble", "nibble_program", "sssp_with_parents",
     "sssp_parents_multi", "sssp_parents_program", "heat_kernel_pr",

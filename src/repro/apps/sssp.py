@@ -49,7 +49,7 @@ def sssp(layout, source: int, mode: str = "hybrid",
 
 
 def sssp_multi(layout, sources, backend=None, engine: Engine = None,
-               max_iters: int = None):
+               max_iters: int = None, dist0=None, frontier0=None):
     """Batched multi-source SSSP: one fused :meth:`Engine.run_batched`
     invocation relaxes ``len(sources)`` queries together, bit-exact with
     per-source :func:`sssp` calls.  Row ``i`` belongs to ``sources[i]``.
@@ -57,15 +57,30 @@ def sssp_multi(layout, sources, backend=None, engine: Engine = None,
     batch across the device mesh (same vertex space: ``D*nv == n_pad``);
     note a dist engine built with ``wire_bf16=True`` rounds f32 distances
     to bf16 on the wire — batched and sequential runs under the SAME wire
-    config still match bit-for-bit."""
+    config still match bit-for-bit.
+
+    ``dist0`` / ``frontier0`` are the warm-start entry (landmark
+    seeding): per-lane ``[B, n_pad]`` initial distances and frontiers.
+    Bellman-Ford relaxation converges to the exact per-source fixpoint
+    from ANY ``dist0`` that upper-bounds the true distances (with
+    ``dist0[i, sources[i]] = 0``), provided ``frontier0`` covers every
+    vertex holding a finite bound — see :mod:`repro.serve.cache` for the
+    seeding construction and the correctness argument.  Lanes may mix
+    seeded and cold initializations."""
     assert layout.weighted, "SSSP needs an edge-weighted graph"
     sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
     B, n_pad = len(sources), layout.n_pad
     src = jnp.asarray(sources, jnp.int32)
-    dist = jnp.full((B, n_pad), INF, jnp.float32) \
-        .at[jnp.arange(B), src].set(0.0)
-    frontier = np.zeros((B, n_pad), bool)
-    frontier[np.arange(B), sources] = True
+    if dist0 is None:
+        dist = jnp.full((B, n_pad), INF, jnp.float32) \
+            .at[jnp.arange(B), src].set(0.0)
+    else:
+        dist = jnp.asarray(dist0, jnp.float32)
+    if frontier0 is None:
+        frontier = np.zeros((B, n_pad), bool)
+        frontier[np.arange(B), sources] = True
+    else:
+        frontier = np.asarray(frontier0, bool)
     eng = engine if engine is not None else Engine(
         layout, sssp_program(), mode="dc", backend=backend)
     states, _, stats = eng.run_batched({"dist": dist}, frontier,

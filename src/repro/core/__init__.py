@@ -1,6 +1,10 @@
 from . import monoid
 from .cost import CostModel
-from .engine import Engine, IterStats
+from .engine import Engine
+# IterStats now lives in the obs schema; re-exported here (silently) for
+# the public repro.core surface.  repro.core.engine.IterStats still
+# resolves but emits a DeprecationWarning.
+from ..obs.schema import IterStats
 from .program import VertexProgram
 
 __all__ = ["monoid", "CostModel", "Engine", "IterStats", "VertexProgram"]

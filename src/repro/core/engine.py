@@ -56,11 +56,18 @@ def _next_pow2(x: int) -> int:
     return 1 if x <= 1 else 1 << (int(x - 1).bit_length())
 
 
-# the per-iteration stat records now live in the obs schema
-# (repro.obs.schema); these re-exports are the compat shim every
-# existing `from repro.core.engine import IterStats` consumer uses
-IterStats = obs.IterStats
-BatchIterStats = obs.BatchIterStats
+# The per-iteration stat records live in the obs schema
+# (repro.obs.schema).  The old module-level aliases here are a
+# deprecation shim: accessing them still works but warns — import from
+# repro.obs.schema (or repro.obs) instead.  Internal code already does.
+def __getattr__(name):
+    if name in ("IterStats", "BatchIterStats"):
+        import warnings
+        warnings.warn(
+            f"repro.core.engine.{name} is deprecated; import it from "
+            "repro.obs.schema", DeprecationWarning, stacklevel=2)
+        return getattr(obs, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _compact_lane_index(lane_act: np.ndarray):
@@ -130,7 +137,7 @@ def _run_batched_loop(step_for_width, states, active, max_iters: int,
         jax.block_until_ready(active)
         wall = time.perf_counter() - t0
         if collect_stats:
-            stats.append(BatchIterStats(
+            stats.append(obs.BatchIterStats(
                 it=it, lanes_active=n_lanes, n_active=n_act, wall_s=wall))
             if obs.enabled():
                 wire = (int(wire_bytes_fn(n_lanes))
@@ -357,7 +364,7 @@ class Engine:
                 dc_p, sc_p = int(dc_mask.sum()), int(sc_sel.sum())
                 mode_str = ("dc" if sc_p == 0 else
                             "sc" if dc_p == 0 else "hybrid")
-                st = IterStats(
+                st = obs.IterStats(
                     it=it, n_active=n_active, e_active=int(ea.sum()),
                     dc_parts=dc_p, sc_parts=sc_p,
                     dc_bytes=b["dc_bytes"], sc_bytes=b["sc_bytes"],

@@ -154,6 +154,37 @@ def grid2d(rows: int, cols: int, weighted: bool = False,
     return from_edges(src, dst, n=rows * cols, weights=w)
 
 
+def symmetrize(g: Graph) -> Graph:
+    """Undirected view: every edge exists in both directions with ONE
+    canonical weight per unordered pair (the minimum of the directed
+    weights, when both existed).  The result satisfies
+    ``d(u, v) == d(v, u)`` exactly — the precondition for the serving
+    tier's landmark seeding (:mod:`repro.serve.cache`) and for weakly-
+    connected components.  Parallel edges are deduplicated."""
+    src = np.repeat(np.arange(g.n, dtype=np.int64), g.out_degrees())
+    dst = g.indices.astype(np.int64)
+    u = np.minimum(src, dst)
+    v = np.maximum(src, dst)
+    key = u * g.n + v
+    if g.weights is None:
+        uniq = np.unique(key)
+        wmin = None
+    else:
+        order = np.argsort(key, kind="stable")
+        key_s, w_s = key[order], g.weights[order]
+        uniq, start = np.unique(key_s, return_index=True)
+        # one canonical weight per unordered pair: min over both
+        # directions (and any parallel duplicates)
+        wmin = np.minimum.reduceat(w_s, start)
+    u2, v2 = uniq // g.n, uniq % g.n
+    loop = u2 == v2                       # self loops emitted once
+    src2 = np.concatenate([u2, v2[~loop]])
+    dst2 = np.concatenate([v2, u2[~loop]])
+    w2 = (None if wmin is None
+          else np.concatenate([wmin, wmin[~loop]]).astype(np.float32))
+    return from_edges(src2, dst2, n=g.n, weights=w2)
+
+
 def to_scipy(g: Graph):
     import scipy.sparse as sp
     data = g.weights if g.weights is not None else np.ones(g.m, np.float32)

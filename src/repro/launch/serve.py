@@ -1,7 +1,15 @@
 """Serving launcher: slot-based continuous batching.
 
+LM serving:
+
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
       --requests 8
+
+Graph-analytics serving (--graph; everything routes through
+:class:`repro.serve.ServeConfig`):
+
+  PYTHONPATH=src python -m repro.launch.serve --graph --scale 10 \
+      --queries 64 --app sssp --cache-dir /tmp/serve-cache
 """
 from __future__ import annotations
 
@@ -15,14 +23,58 @@ import numpy as np
 from ..configs import get_config, get_smoke_config
 from ..dist.sharding import param_shardings, set_activation_mesh
 from ..models.transformer import init_lm
-from ..serve import Request, Server
+from ..serve import GraphQuery, GraphQueryServer, Request, ServeConfig, Server
 from ..train import checkpoint
 from .mesh import make_local_mesh
 
 
+def serve_graph(args):
+    """Stand up a GraphQueryServer over a symmetrized RMAT graph and
+    push Zipf-skewed repeat-source traffic through it."""
+    from ..graph import build_layout, rmat, symmetrize
+
+    g = symmetrize(rmat(args.scale, seed=0, weighted=(args.app == "sssp")))
+    layout = build_layout(g, k=args.parts)
+    cfg = ServeConfig(max_batch=args.max_batch,
+                      cache_size=args.cache_size,
+                      cache_backend=args.cache_dir,
+                      semantic=not args.no_semantic,
+                      warm_threshold=args.warm_threshold)
+    srv = GraphQueryServer(layout, cfg)
+    rng = np.random.default_rng(0)
+    # Zipf-skewed sources: repeat traffic exercises the exact-result
+    # entries, near-landmark traffic the seeded path
+    pool = rng.integers(0, layout.n, 16)
+    for i in range(args.queries):
+        src = int(pool[min(rng.zipf(1.5) - 1, len(pool) - 1)])
+        srv.submit(GraphQuery(qid=i, app=args.app, params={"source": src}))
+    t0 = time.time()
+    done = srv.run()
+    dt = time.time() - t0
+    st = srv.cache.stats()
+    print(f"[serve-graph] {len(done)} {args.app} queries in {dt:.2f}s "
+          f"({len(done) / dt:.1f} q/s)")
+    print(f"[serve-graph] result hits {srv.cache_hits} / misses "
+          f"{srv.cache_misses}; semantic hits {srv.semantic_hits} / "
+          f"misses {srv.semantic_misses}; backend {st}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--graph", action="store_true",
+                    help="serve graph-analytics queries instead of an LM")
+    ap.add_argument("--arch")
+    ap.add_argument("--app", default="sssp",
+                    choices=["bfs", "sssp", "sssp_parents"])
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--parts", type=int, default=16)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--cache-size", type=int, default=128)
+    ap.add_argument("--cache-dir", default=None,
+                    help="disk-backed cache directory (default: in-memory)")
+    ap.add_argument("--no-semantic", action="store_true")
+    ap.add_argument("--warm-threshold", type=int, default=3)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
@@ -31,6 +83,10 @@ def main():
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
+    if args.graph:
+        return serve_graph(args)
+    if not args.arch:
+        ap.error("--arch is required unless --graph is given")
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not cfg.decoder:
         raise SystemExit(f"{args.arch} is encoder-only; no decode serving")

@@ -94,7 +94,22 @@ EVENT_SCHEMA = {
             "required": {"app": "str", "layout": "str", "cached": "bool",
                          "wall_s": "float"},
         },
-        # LRU result cache dropped (same-layout invalidation escape hatch)
+        # a fused batch that ran with landmark-seeded initial state
+        # (semantic cache hit on at least one lane); saved_iters is the
+        # landmark's cold iteration count minus the seeded run's, floored
+        # at zero — a proxy for the iterations the seed saved
+        "seeded_batch": {
+            "required": {"app": "str", "layout": "str", "batch": "int",
+                         "seeded": "int", "iters": "int",
+                         "saved_iters": "int"},
+        },
+        # one landmark precomputed by the async cache warmer
+        "cache_warm": {
+            "required": {"app": "str", "layout": "str", "source": "int",
+                         "wall_s": "float"},
+        },
+        # result/semantic cache dropped (same-layout invalidation escape
+        # hatch)
         "cache_clear": {
             "required": {"layout": "str"},
         },

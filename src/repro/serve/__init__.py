@@ -1,2 +1,74 @@
+"""Serving tier: LM continuous batching + graph-analytics query serving.
+
+:class:`ServeConfig` is the one configuration object of the graph query
+server; :mod:`repro.serve.cache` is the cache subsystem behind it
+(backend protocol, semantic entries, async warmer).
+"""
+import dataclasses
+from typing import Any, Optional
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Consolidated :class:`GraphQueryServer` configuration.
+
+    The server used to take a growing pile of keyword arguments; they
+    now live here (passing them as keywords still works but emits a
+    ``DeprecationWarning``).  Construct with only the fields you care
+    about — defaults match the old keyword defaults.
+
+    Engine / batching:
+      backend:       kernel-backend name (None = registry default).
+      mode:          scatter-gather mode ('hybrid' | 'dc' | 'sc').
+      max_batch:     max queries fused into one batched run.
+      sharded/mesh:  distributed serving (both or neither).
+      wire_bf16 / wire_bitmap: dist-only wire compression toggles.
+
+    Caching (see :mod:`repro.serve.cache` for the key space and the
+    invalidation rule):
+      cache_size:    backend capacity in entries (result + semantic
+                     entries share it).
+      cache_backend: a :class:`repro.serve.cache.CacheBackend` instance,
+                     a directory path (-> :class:`DiskCache`), or None
+                     (-> :class:`MemoryLRU`).
+      semantic:      enable the partition-level semantic cache: converged
+                     per-partition state is captured as landmarks and
+                     misses near a landmark run landmark-seeded.
+      capture_landmarks: store every computed batch lane's converged
+                     state as a landmark (otherwise only the async
+                     warmer creates landmarks).
+      seed_max_distance: only seed from a landmark within this distance
+                     of the query source (None = any reachable landmark).
+      warm_threshold: source frequency at which the async warmer
+                     precomputes a landmark.
+      warm_budget:   landmark precomputations per idle scheduler tick.
+    """
+
+    backend: Optional[str] = None
+    mode: str = "hybrid"
+    max_batch: int = 64
+    cache_size: int = 128
+    sharded: Any = None
+    mesh: Any = None
+    wire_bf16: bool = False
+    wire_bitmap: bool = True
+    cache_backend: Any = None
+    semantic: bool = True
+    capture_landmarks: bool = True
+    seed_max_distance: Optional[float] = None
+    warm_threshold: int = 3
+    warm_budget: int = 1
+
+
+# ServeConfig must exist before .engine executes (it imports it back
+# from this partially-initialized package)
+from .cache import (CacheBackend, CacheWarmer, DiskCache, MemoryLRU,
+                    SemanticCache, make_backend)
 from .engine import (GraphQuery, GraphQueryServer, Request, Server,
                      decode_step, init_cache, prefill)
+
+__all__ = [
+    "ServeConfig", "CacheBackend", "CacheWarmer", "DiskCache", "MemoryLRU",
+    "SemanticCache", "make_backend", "GraphQuery", "GraphQueryServer",
+    "Request", "Server", "decode_step", "init_cache", "prefill",
+]

@@ -21,14 +21,37 @@ continuous-batching idea to PPM queries over one resident layout:
     two (by repeating the first source; padded lanes are discarded), so
     the engine's per-batch-size jit cache holds at most log2(max_batch)
     compiled steps instead of one per distinct queue depth.
-  * **LRU result memoization** — results are cached under
-    ``(layout identity, app, canonicalized params)``.  The invalidation
-    rule is layout identity: the server serves exactly one resident
-    layout, every cached entry is keyed on it, and pointing a server at a
-    new graph means constructing a new server (or calling
-    :meth:`GraphQueryServer.clear_cache`), never mutating the layout in
-    place.  Cached results are returned by reference and must be treated
-    as read-only.
+  * **Result memoization + semantic caching** — every cache entry lives
+    in one pluggable :class:`repro.serve.cache.CacheBackend` (in-memory
+    LRU or disk-backed; ``ServeConfig.cache_backend``) under the
+    documented key space of :mod:`repro.serve.cache`: exact-match query
+    results under ``res|…`` and converged per-partition *landmark* state
+    under ``sem|…``.  A miss whose source is within reach of a cached
+    landmark is answered by a landmark-seeded run — exactly correct on
+    symmetric graphs (see the seeding proof in
+    :mod:`repro.serve.cache`), converging in fewer or equal iterations.
+    An async :class:`repro.serve.cache.CacheWarmer` turns repeated
+    sources into precomputed landmarks on idle scheduler ticks.
+
+    **Invalidation rules** (specified once, on the backend protocol —
+    :meth:`repro.serve.cache.CacheBackend.clear`):
+
+    - entries are keyed by the resident layout's content tag; the server
+      serves exactly one resident layout and never mutates it in place;
+    - :meth:`GraphQueryServer.clear_cache` and
+      :meth:`GraphQueryServer.swap_layout` call ``backend.clear()`` —
+      *both* exact results and semantic landmark state are dropped
+      wholesale (a seeded query must never read state from a previous
+      layout), the warmer's frequency statistics and pending jobs are
+      reset, and the old layout's metric series are reset with them;
+    - semantic entries are additionally gated at *read* time: seeding is
+      skipped entirely on asymmetric graphs (auto-detected per layout:
+      structure for BFS, structure + weights for SSSP) and under
+      distributed serving, so a stale-looking entry can demote a query
+      to a cold run but never corrupt it.
+
+    Cached results are returned by reference (memory backend) and must
+    be treated as read-only.
   * **Distributed batching** — constructed with ``sharded=`` (a
     :func:`repro.graph.shard.shard_layout` of the resident layout) and
     ``mesh=``, the shared engines become
@@ -56,6 +79,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -63,6 +87,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
+from . import ServeConfig
+from . import cache as cache_lib
 from ..models import moe as moe_lib
 from ..models import ssm as ssm_lib
 from ..models.config import ModelConfig
@@ -389,10 +415,14 @@ class GraphQueryServer:
     the distinct sources to the next power of two (bounding the jit
     cache), and answers the whole batch with a single fused
     :meth:`~repro.core.engine.Engine.run_batched` invocation.  Repeated
-    ``(app, params)`` queries are memoized in an LRU result cache keyed
-    on layout identity (see the module docstring for the invalidation
-    rule).  Queries overriding ``mode`` / ``backend`` / ``bw_ratio`` run
-    on a dedicated engine and never touch the shared engine cache.
+    ``(app, params)`` queries are memoized as exact-match entries in the
+    cache backend; BFS/SSSP misses near a cached landmark run
+    landmark-seeded (see the module docstring for the caching design and
+    the invalidation rules).  After the tick, if the queue is empty, the
+    async warmer gets one bounded drain — landmark precomputation rides
+    the scheduler's idle edges, never a query's latency path.  Queries
+    overriding ``mode`` / ``backend`` / ``bw_ratio`` run on a dedicated
+    engine and never touch the shared engine cache.
     """
 
     #: apps whose queries differ only in ``source`` and can share a batch
@@ -404,36 +434,91 @@ class GraphQueryServer:
     #: engine-construction params: a query overriding any of these cannot
     #: share the server engine (all three are baked in at construction)
     ENGINE_KEYS = frozenset({"mode", "backend", "bw_ratio"})
+    #: apps the semantic cache can seed: the landmark-proximity distance
+    #: field, the converged state fields captured per landmark, and each
+    #: field's fill value on untouched partitions.  ``sssp_parents`` is
+    #: deliberately absent: its packed payload seeds need a subtler
+    #: upper-bound argument, so it gets exact-match caching only.
+    SEEDED_FIELDS = {
+        "bfs": ("level", ("level", "parent"),
+                {"level": -1.0, "parent": -1.0}),
+        "sssp": ("dist", ("dist",), {"dist": float("inf")}),
+    }
 
-    def __init__(self, layout, backend=None, mode: str = "hybrid",
-                 max_batch: int = 64, cache_size: int = 128,
-                 sharded=None, mesh=None, wire_bf16: bool = False,
-                 wire_bitmap: bool = True):
-        if (sharded is None) != (mesh is None):
+    def __init__(self, layout, config: Optional[ServeConfig] = None,
+                 **legacy):
+        if legacy:
+            warnings.warn(
+                "passing GraphQueryServer options as keyword arguments "
+                "is deprecated; pass a repro.serve.ServeConfig",
+                DeprecationWarning, stacklevel=2)
+            known = {f.name for f in dataclasses.fields(ServeConfig)}
+            unknown = set(legacy) - known
+            if unknown:
+                raise TypeError("unknown GraphQueryServer option(s): "
+                                f"{sorted(unknown)}")
+            config = dataclasses.replace(config or ServeConfig(), **legacy)
+        config = config or ServeConfig()
+        if (config.sharded is None) != (config.mesh is None):
             raise ValueError("distributed serving needs BOTH sharded and "
                              "mesh (or neither)")
+        self.config = config
         self.layout = layout
-        self.backend = backend
-        self.mode = mode
-        self.max_batch = max_batch
-        self.cache_size = cache_size
+        # legacy attribute surface (mirrors of the config)
+        self.backend = config.backend
+        self.mode = config.mode
+        self.max_batch = config.max_batch
+        self.cache_size = config.cache_size
         #: when set (with ``mesh``), shared engines are
         #: :class:`repro.dist.engine.DistEngine` instances over the
         #: sharded layout and batches fan out across the device mesh
-        self.sharded = sharded
-        self.mesh = mesh
-        self.wire_bf16 = wire_bf16
-        self.wire_bitmap = wire_bitmap
+        self.sharded = config.sharded
+        self.mesh = config.mesh
+        self.wire_bf16 = config.wire_bf16
+        self.wire_bitmap = config.wire_bitmap
         self._engines = {}            # app name -> shared (Dist)Engine
         self.queue = collections.deque()
         self.done = []
-        self._result_cache = collections.OrderedDict()
+        #: the pluggable CacheBackend every cache entry lives in (exact
+        #: results AND semantic landmark state — one shared namespace)
+        self.cache = cache_lib.make_backend(config.cache_backend,
+                                            config.cache_size)
         self.cache_hits = 0
         self.cache_misses = 0
+        self.semantic_hits = 0        # lanes answered landmark-seeded
+        self.semantic_misses = 0      # seedable lanes with no landmark
         # metric series are labeled by layout identity: hit rates and
         # latencies must never aggregate across incompatible layouts
         # (cache keys are layout-identity too — same invalidation rule)
-        self._layout_tag = f"{id(layout):#x}"
+        self._layout_tag = cache_lib.layout_tag(layout)
+        self._bind_layout()
+
+    def _bind_layout(self):
+        """(Re)build the layout-scoped cache clients: the semantic view,
+        the warmer, and the lazily-computed symmetry flags."""
+        lay, cfg = self.layout, self.config
+        self.semantic = (cache_lib.SemanticCache(
+            self.cache, self._layout_tag, lay.k, lay.q, lay.n_pad)
+            if cfg.semantic else None)
+        self.warmer = (cache_lib.CacheWarmer(
+            self.semantic, threshold=cfg.warm_threshold,
+            budget=cfg.warm_budget) if self.semantic is not None else None)
+        self._sym = {}                # weights-flag -> bool (lazy)
+
+    def _symmetric(self, need_weights: bool) -> bool:
+        """Seeding precondition, computed once per layout (per strength:
+        BFS needs structural symmetry, SSSP structure + weights)."""
+        flag = self._sym.get(need_weights)
+        if flag is None:
+            flag = cache_lib.layout_is_symmetric(self.layout,
+                                                 weights=need_weights)
+            self._sym[need_weights] = flag
+        return flag
+
+    def _seedable(self, app: str) -> bool:
+        return (self.semantic is not None and app in self.SEEDED_FIELDS
+                and self.sharded is None
+                and self._symmetric(need_weights=(app == "sssp")))
 
     # ---- shared engines ------------------------------------------------
     def _shared_engine(self, app: str, make_program):
@@ -458,34 +543,16 @@ class GraphQueryServer:
             self._engines[app] = eng
         return eng
 
-    # ---- LRU result cache ----------------------------------------------
-    def _cache_key(self, q: GraphQuery):
-        """``(layout identity, app, canonicalized params)`` or None when a
-        param value defies hashing (such a query simply isn't memoized)."""
-        def canon(v):
-            if isinstance(v, (list, tuple, np.ndarray)):
-                return tuple(np.asarray(v).reshape(-1).tolist())
-            return v
-        try:
-            items = tuple(sorted((k, canon(v)) for k, v in q.params.items()))
-            hash(items)
-        except TypeError:
-            return None
-        return (id(self.layout), q.app, items)
+    # ---- cache clients (exact results + semantic state) ----------------
+    def _result_key(self, q: GraphQuery) -> Optional[str]:
+        """The exact-match entry key (``res|…`` in the documented key
+        space of :mod:`repro.serve.cache`) or None when a param value
+        defies canonicalization (such a query simply isn't memoized)."""
+        return cache_lib.result_key(self._layout_tag, q.app, q.params)
 
-    def _cache_get(self, key):
-        if key is None or key not in self._result_cache:
-            return None
-        self._result_cache.move_to_end(key)
-        return self._result_cache[key]
-
-    def _cache_put(self, key, result):
-        if key is None:
-            return
-        self._result_cache[key] = result
-        self._result_cache.move_to_end(key)
-        while len(self._result_cache) > self.cache_size:
-            self._result_cache.popitem(last=False)
+    def _result_get(self, q: GraphQuery):
+        key = self._result_key(q)
+        return self.cache.get(key) if key is not None else None
 
     def _note_cache(self, hit: bool, app: str):
         if hit:
@@ -502,14 +569,24 @@ class GraphQueryServer:
         gauges computed against a different cache population."""
         self.cache_hits = 0
         self.cache_misses = 0
+        self.semantic_hits = 0
+        self.semantic_misses = 0
         if obs.enabled():
             reg = obs.registry()
             for name in ("serve.cache_hits", "serve.cache_misses",
+                         "serve.semantic_hits", "serve.semantic_misses",
+                         "serve.seed_iters_saved", "serve.source_freq",
+                         "serve.warmed_landmarks",
                          "serve.query_wall_s", "serve.batch_wall_s"):
                 reg.reset_metric(name, layout=self._layout_tag)
 
     def clear_cache(self):
-        self._result_cache.clear()
+        """Invalidate everything: one :meth:`CacheBackend.clear` drops
+        exact results AND semantic landmark state (the rule is specified
+        on the protocol), and the warmer forgets its statistics."""
+        self.cache.clear()
+        if self.warmer is not None:
+            self.warmer.reset()
         self._reset_layout_metrics()
         if obs.enabled():
             obs.event("cache_clear", layout=self._layout_tag)
@@ -517,22 +594,30 @@ class GraphQueryServer:
     def swap_layout(self, layout, sharded=None, mesh=None):
         """Re-point the server at a new resident layout.
 
-        Every cached result and shared engine is keyed on layout identity,
-        so both are dropped wholesale; the metric series of the old layout
-        are reset too (hit ratios across incompatible layouts are
-        meaningless).  The new layout gets a fresh identity tag, so its
-        series start clean."""
+        Every cached entry — exact results and semantic landmark state
+        alike — is keyed on layout identity, so the backend is cleared
+        wholesale (``backend.clear()``: a seeded query must never read
+        warm state from a previous layout) and the shared engines are
+        dropped; the warmer's source statistics and the metric series of
+        the old layout are reset too (hit ratios across incompatible
+        layouts are meaningless).  The new layout gets a fresh content
+        tag and fresh symmetry flags, so its series start clean."""
         if (sharded is None) != (mesh is None):
             raise ValueError("distributed serving needs BOTH sharded and "
                              "mesh (or neither)")
         old = self._layout_tag
-        self._result_cache.clear()
+        self.cache.clear()
         self._engines = {}
+        if self.warmer is not None:
+            self.warmer.reset()
         self._reset_layout_metrics()
         self.layout = layout
         self.sharded = sharded
         self.mesh = mesh
-        self._layout_tag = f"{id(layout):#x}"
+        self.config = dataclasses.replace(self.config, sharded=sharded,
+                                          mesh=mesh)
+        self._layout_tag = cache_lib.layout_tag(layout)
+        self._bind_layout()
         if obs.enabled():
             obs.event("layout_swap", old=old, new=self._layout_tag)
 
@@ -548,9 +633,89 @@ class GraphQueryServer:
         except TypeError:
             return None
 
+    # ---- landmark seeding ----------------------------------------------
+    def _lookup_landmarks(self, app, extra, sources):
+        """Best landmark per distinct source: ``(lm, entry, d_ls)`` or
+        None.  Counts semantic hits/misses per lane."""
+        dist_field = self.SEEDED_FIELDS[app][0]
+        picks = []
+        for s in sources:
+            pick = self.semantic.best_landmark(
+                app, extra, int(s), dist_field,
+                max_distance=self.config.seed_max_distance)
+            picks.append(pick)
+            hit = pick is not None
+            if hit:
+                self.semantic_hits += 1
+            else:
+                self.semantic_misses += 1
+            if obs.enabled():
+                obs.inc("serve.semantic_hits" if hit
+                        else "serve.semantic_misses",
+                        app=app, layout=self._layout_tag)
+        return picks
+
+    def _sssp_seed_arrays(self, sources, picks):
+        """Per-lane warm SSSP init: ``dist0[v] = d_L(v) + d_L(s)`` (a
+        valid upper bound on symmetric graphs), ``dist0[s] = 0``, and a
+        frontier covering every finite seed.  Unseeded lanes get the
+        cold one-hot init."""
+        n_pad = self.layout.n_pad
+        dist0 = np.full((len(sources), n_pad), np.inf, np.float32)
+        for i, (s, pick) in enumerate(zip(sources, picks)):
+            if pick is not None:
+                _, entry, d_ls = pick
+                dist0[i] = self.semantic.expand(entry, "dist", np.inf)
+                dist0[i] += np.float32(d_ls)
+            dist0[i, s] = 0.0
+        return dist0, np.isfinite(dist0)
+
+    def _bfs_seed_arrays(self, sources, picks):
+        """Per-lane warm BFS init: level upper bounds ``level_L + d_ls``
+        with PARENT-UNKNOWN payloads (the sentinel loses every packed
+        tie, so the seed stays a true upper bound in the lexicographic
+        order even when the level bound is already tight)."""
+        n_pad = self.layout.n_pad
+        levels = np.full((len(sources), n_pad), -1, np.int64)
+        parents = np.full((len(sources), n_pad), -1, np.int64)
+        for i, (s, pick) in enumerate(zip(sources, picks)):
+            if pick is not None:
+                _, entry, d_ls = pick
+                lv = self.semantic.expand(entry, "level", -1).astype(
+                    np.int64)
+                lv[lv >= 0] += int(d_ls)
+                levels[i] = lv
+            levels[i, s] = 0
+            parents[i, s] = s
+        return levels, parents, levels >= 0
+
+    def _capture_landmarks(self, app, extra, sources, res, iters):
+        """Opportunistically store each computed lane's converged state
+        as a semantic landmark (results are exact whether the lane ran
+        cold or seeded)."""
+        dist_field, fields, fills = self.SEEDED_FIELDS[app]
+        n, n_pad = self.layout.n, self.layout.n_pad
+        for i, s in enumerate(sources):
+            if self.semantic.get_state(app, extra, int(s)) is not None:
+                continue
+            fvecs = {}
+            for name in fields:
+                row = np.asarray(res[name][i])
+                full = np.full(n_pad, fills[name], dtype=row.dtype)
+                full[:n] = row
+                fvecs[name] = full
+            anchor = fvecs[dist_field]
+            touched = (np.isfinite(anchor) if app == "sssp"
+                       else anchor >= 0)
+            self.semantic.put_state(app, extra, int(s), fvecs, touched,
+                                    fills, iters)
+
     def _run_batch(self, batch):
-        """Answer a same-signature batch with one fused run_batched call."""
-        from ..apps.bfs import bfs_multi, bfs_program
+        """Answer a same-signature batch with one fused run_batched call,
+        landmark-seeding the lanes that are within reach of cached
+        semantic state."""
+        from ..apps.bfs import (bfs_multi, bfs_program, bfs_seeded_multi,
+                                bfs_seeded_program)
         from ..apps.sssp import sssp_multi, sssp_program
         from ..apps.sssp_parents import (sssp_parents_multi,
                                          sssp_parents_program)
@@ -559,7 +724,7 @@ class GraphQueryServer:
                  "sssp_parents": (sssp_parents_multi, sssp_parents_program)}
         run = []                       # queries that actually need a lane
         for q in batch:
-            cached = self._cache_get(self._cache_key(q))
+            cached = self._result_get(q)
             if cached is not None:
                 self._note_cache(True, q.app)
                 if obs.enabled():
@@ -581,13 +746,52 @@ class GraphQueryServer:
         lane_of = {}
         for q in run:
             lane_of.setdefault(int(q.params["source"]), len(lane_of))
-        sources = list(lane_of)
-        sources += [sources[0]] * (_next_pow2(len(sources)) - len(sources))
+        distinct = list(lane_of)
         extra = {k: v for k, v in run[0].params.items() if k != "source"}
-        eng = self._shared_engine(app, make_program)
+        picks = None
+        if self._seedable(app):
+            picks = self._lookup_landmarks(app, extra, distinct)
+            if not any(p is not None for p in picks):
+                picks = None           # nothing to seed: cold fast path
+        pad = _next_pow2(len(distinct)) - len(distinct)
+        sources = distinct + [distinct[0]] * pad
         t0 = time.perf_counter()
-        res = multi_fn(self.layout, sources, engine=eng, **extra)
+        if picks is not None:
+            padded_picks = picks + [picks[0]] * pad
+            if app == "sssp":
+                dist0, frontier0 = self._sssp_seed_arrays(sources,
+                                                          padded_picks)
+                eng = self._shared_engine("sssp", sssp_program)
+                res = multi_fn(self.layout, sources, engine=eng,
+                               dist0=dist0, frontier0=frontier0, **extra)
+            else:                      # bfs: the warm-startable program
+                levels, parents, frontier0 = self._bfs_seed_arrays(
+                    sources, padded_picks)
+                eng = self._shared_engine("bfs_seeded", bfs_seeded_program)
+                res = bfs_seeded_multi(self.layout, sources, engine=eng,
+                                       seed_levels=levels,
+                                       seed_parents=parents,
+                                       frontiers=frontier0, **extra)
+        else:
+            eng = self._shared_engine(app, make_program)
+            res = multi_fn(self.layout, sources, engine=eng, **extra)
         wall = time.perf_counter() - t0
+        iters = len(res["stats"])
+        if picks is not None:
+            # iteration savings vs. the landmark's own cold convergence
+            # (the best cold-run proxy available without re-running cold)
+            lm_iters = max(int(p[1]["meta"]["iters"])
+                           for p in picks if p is not None)
+            saved = max(0, lm_iters - iters)
+            if obs.enabled():
+                obs.event("seeded_batch", app=app, layout=self._layout_tag,
+                          batch=len(run),
+                          seeded=sum(p is not None for p in picks),
+                          iters=iters, saved_iters=saved)
+                obs.inc("serve.seed_iters_saved", saved, app=app,
+                        layout=self._layout_tag)
+        if self.config.capture_landmarks and self._seedable(app):
+            self._capture_landmarks(app, extra, distinct, res, iters)
         if obs.enabled():
             obs.event("serve_batch", app=app, layout=self._layout_tag,
                       batch=len(run), distinct_sources=len(lane_of),
@@ -609,7 +813,9 @@ class GraphQueryServer:
             out = {k: (np.array(v[i]) if k != "stats" else list(v))
                    for k, v in res.items()}
             self._note_cache(False, q.app)
-            self._cache_put(self._cache_key(q), out)
+            key = self._result_key(q)
+            if key is not None:
+                self.cache.put(key, out)
             q.result = out
             self.done.append(q)
 
@@ -653,8 +859,44 @@ class GraphQueryServer:
             return nibble(self.layout, backend=backend, mode=mode, **p)
         raise ValueError(f"unknown graph app {q.app!r}")
 
+    # ---- async warming -------------------------------------------------
+    def _warm_compute(self, app, extra, source):
+        """Warmer callback: converge ``source`` cold on the shared
+        engine, store its state as a landmark AND its exact result (the
+        repeat traffic that made it hot will hit the result entry)."""
+        from ..apps.bfs import bfs_multi, bfs_program
+        from ..apps.sssp import sssp_multi, sssp_program
+        multi = {"bfs": (bfs_multi, bfs_program),
+                 "sssp": (sssp_multi, sssp_program)}
+        if app not in multi or not self._seedable(app):
+            return
+        multi_fn, make_program = multi[app]
+        eng = self._shared_engine(app, make_program)
+        res = multi_fn(self.layout, [int(source)], engine=eng, **extra)
+        self._capture_landmarks(app, extra, [int(source)], res,
+                                len(res["stats"]))
+        row = {k: (np.array(v[0]) if k != "stats" else list(v))
+               for k, v in res.items()}
+        key = cache_lib.result_key(self._layout_tag, app,
+                                   dict(extra, source=int(source)))
+        if key is not None:
+            self.cache.put(key, row)
+
+    def _maybe_warm(self):
+        """Drain a bounded number of warm jobs, only on idle ticks (an
+        empty queue): warming must never ride a query's latency path."""
+        if self.warmer is None or self.queue:
+            return
+        self.warmer.scan()
+        if self.warmer.pending:
+            self.warmer.drain(self._warm_compute)
+
     def submit(self, q: GraphQuery):
         self.queue.append(q)
+        if self.warmer is not None and q.app in self.SEEDED_FIELDS \
+                and self._batch_sig(q) is not None:
+            extra = {k: v for k, v in q.params.items() if k != "source"}
+            self.warmer.note_query(q.app, extra, int(q.params["source"]))
         if obs.enabled():
             obs.set_gauge("serve.queue_depth", len(self.queue),
                           layout=self._layout_tag)
@@ -662,7 +904,8 @@ class GraphQueryServer:
     def step(self) -> bool:
         """One scheduler tick: answer the head query — together with every
         queued query batchable with it when its app supports batching —
-        consulting the LRU result cache first."""
+        consulting the result cache first; when the tick empties the
+        queue, give the async warmer a bounded drain."""
         if not self.queue:
             return False
         q = self.queue.popleft()
@@ -680,8 +923,9 @@ class GraphQueryServer:
                 obs.set_gauge("serve.queue_depth", len(self.queue),
                               layout=self._layout_tag)
             self._run_batch(batch)
+            self._maybe_warm()
             return True
-        cached = self._cache_get(self._cache_key(q))
+        cached = self._result_get(q)
         if cached is not None:
             self._note_cache(True, q.app)
             if obs.enabled():
@@ -699,11 +943,14 @@ class GraphQueryServer:
                           wall_s=wall)
                 obs.observe("serve.query_wall_s", wall, app=q.app,
                             layout=self._layout_tag)
-            self._cache_put(self._cache_key(q), q.result)
+            key = self._result_key(q)
+            if key is not None:
+                self.cache.put(key, q.result)
         if obs.enabled():
             obs.set_gauge("serve.queue_depth", len(self.queue),
                           layout=self._layout_tag)
         self.done.append(q)
+        self._maybe_warm()
         return True
 
     def run(self):

@@ -326,11 +326,24 @@ class TestEngineTelemetry:
             obs.reset()
 
     def test_iterstats_compat_shim(self):
+        import warnings
         from repro.core import engine as core_engine
-        assert core_engine.IterStats is obs_schema.IterStats
-        assert core_engine.BatchIterStats is obs_schema.BatchIterStats
+        # the old names still resolve, but each access warns
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            assert core_engine.IterStats is obs_schema.IterStats
+            assert core_engine.BatchIterStats is obs_schema.BatchIterStats
+        assert len(rec) == 2
+        assert all(issubclass(w.category, DeprecationWarning) for w in rec)
+        assert "repro.obs.schema" in str(rec[0].message)
+        # the public repro.core re-export stays silent
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            import repro.core
+            assert repro.core.IterStats is obs_schema.IterStats
+        assert not rec
         # pre-obs positional construction still works
-        st_ = core_engine.IterStats(0, 1, 2, 3, 4, 5.0, 6.0, 0.1)
+        st_ = obs_schema.IterStats(0, 1, 2, 3, 4, 5.0, 6.0, 0.1)
         assert (st_.mode, st_.program) == ("", "")
         assert obs_schema.as_event(st_)["dc_bytes"] == 5.0
 

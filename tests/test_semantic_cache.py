@@ -1,0 +1,421 @@
+"""Partition-level semantic cache: backend protocol conformance,
+landmark-seeded warm starts (exactly equal to cold runs, fewer-or-equal
+iterations), invalidation on clear/swap, and the async warmer.
+
+The seeding correctness contract under test (see repro/serve/cache.py):
+on a symmetric graph, initializing a min-monoid program from
+``d_L(v) + d_L(s)`` upper bounds (landmark L, source s) converges to the
+bit-exact cold-start fixpoint — int monoids bit-exact, f32 within 1e-6.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.apps import (bfs, bfs_multi, bfs_seeded_multi, sssp, sssp_multi)
+from repro.graph import build_layout, grid2d, rmat, symmetrize
+from repro.serve import (CacheBackend, DiskCache, GraphQuery,
+                         GraphQueryServer, MemoryLRU, ServeConfig,
+                         make_backend)
+from repro.serve import cache as cache_lib
+
+
+# ----------------------------------------------------------------------
+# fixtures
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sym_layout():
+    """Symmetric structure AND weights: the full seeding precondition."""
+    g = symmetrize(rmat(8, 8, seed=3, weighted=True))
+    return build_layout(g, k=8, edge_tile=64, msg_tile=32)
+
+
+@pytest.fixture(scope="module")
+def grid_layout():
+    """Large-diameter symmetric graph (seeding saves many iterations)."""
+    g = symmetrize(grid2d(16, 16, weighted=True, seed=0))
+    return build_layout(g, k=8, edge_tile=64, msg_tile=32)
+
+
+@pytest.fixture(scope="module")
+def asym_layout():
+    """Directed rmat: seeding must be auto-disabled."""
+    g = rmat(8, 8, seed=3, weighted=True)
+    return build_layout(g, k=8, edge_tile=64, msg_tile=32)
+
+
+def backends(tmp_path):
+    return [MemoryLRU(capacity=4),
+            DiskCache(str(tmp_path / "disk"), capacity=4)]
+
+
+# ----------------------------------------------------------------------
+# CacheBackend protocol
+# ----------------------------------------------------------------------
+
+class TestBackendProtocol:
+    def test_protocol_conformance(self, tmp_path):
+        for b in backends(tmp_path):
+            assert isinstance(b, CacheBackend)
+
+    def test_roundtrip_arrays_bitexact_and_nested_meta(self, tmp_path):
+        arr = np.array([1.5, np.inf, -0.0], np.float32)
+        u64 = np.arange(4, dtype=np.uint64) << np.uint64(60)
+        for b in backends(tmp_path):
+            b.put("k", {"a": arr, "u": u64,
+                        "meta": {"iters": 3, "fills": {"dist": None}}})
+            v = b.get("k")
+            assert np.array_equal(v["a"], arr) and v["a"].dtype == arr.dtype
+            assert np.array_equal(v["u"], u64) and v["u"].dtype == u64.dtype
+            assert v["meta"]["iters"] == 3
+            assert v["meta"]["fills"]["dist"] is None
+
+    def test_lru_eviction_under_capacity(self, tmp_path):
+        for b in backends(tmp_path):
+            for i in range(6):
+                b.put(f"k{i}", {"i": np.asarray([i])})
+            assert len(b) == 4
+            assert b.keys() == ["k2", "k3", "k4", "k5"]
+            # get() refreshes recency: k2 survives the next eviction
+            assert b.get("k2") is not None
+            b.put("k6", {"i": np.asarray([6])})
+            assert "k2" in b.keys() and "k3" not in b.keys()
+            st = b.stats()
+            assert st["entries"] == 4 and st["evictions"] == 3
+            assert st["puts"] == 7
+
+    def test_evict_and_clear(self, tmp_path):
+        for b in backends(tmp_path):
+            b.put("x", {"v": np.zeros(2)})
+            assert b.evict("x") and not b.evict("x")
+            assert b.get("x") is None
+            b.put("y", {"v": np.zeros(2)})
+            b.clear()
+            assert len(b) == 0 and b.keys() == []
+
+    def test_disk_cache_survives_reopen(self, tmp_path):
+        path = str(tmp_path / "persist")
+        b = DiskCache(path, capacity=8)
+        b.put("keep", {"a": np.arange(3.0)})
+        b.put("drop", {"a": np.arange(2.0)})
+        b.evict("drop")
+        b2 = DiskCache(path, capacity=8)          # replays index.jsonl
+        assert b2.keys() == ["keep"]
+        assert np.array_equal(b2.get("keep")["a"], np.arange(3.0))
+        b2.clear()
+        assert len(DiskCache(path, capacity=8)) == 0
+
+    def test_make_backend_specs(self, tmp_path):
+        assert isinstance(make_backend(None, 8), MemoryLRU)
+        d = make_backend(str(tmp_path / "d"), 8)
+        assert isinstance(d, DiskCache)
+        inst = MemoryLRU(2)
+        assert make_backend(inst, 99) is inst
+
+
+# ----------------------------------------------------------------------
+# key space
+# ----------------------------------------------------------------------
+
+class TestKeySpace:
+    def test_keys_are_canonical_and_namespaced(self):
+        k1 = cache_lib.result_key("L", "bfs", {"source": 3, "max_iters": 9})
+        k2 = cache_lib.result_key("L", "bfs", {"max_iters": 9, "source": 3})
+        assert k1 == k2 and k1.startswith("res|L|bfs|")
+        s = cache_lib.semantic_key("L", "sssp", {}, 7)
+        assert s.startswith("sem|L|sssp|") and s.endswith("|src=7")
+        assert s.startswith(cache_lib.semantic_prefix("L", "sssp", {}))
+        # res and sem never collide (distinct namespaces)
+        assert not s.startswith("res|")
+
+    def test_uncanonicalizable_params_yield_none(self):
+        assert cache_lib.canon_params({"seeds": {0: 1}}) is None
+        assert cache_lib.result_key("L", "bfs", {"x": {0: 1}}) is None
+        assert cache_lib.semantic_key("L", "bfs", {"x": {0: 1}}, 0) is None
+
+    def test_layout_tag_is_content_derived(self, sym_layout, asym_layout):
+        assert cache_lib.layout_tag(sym_layout) == \
+            cache_lib.layout_tag(sym_layout)
+        assert cache_lib.layout_tag(sym_layout) != \
+            cache_lib.layout_tag(asym_layout)
+
+
+# ----------------------------------------------------------------------
+# symmetry detection + weighted symmetrize
+# ----------------------------------------------------------------------
+
+class TestSymmetry:
+    def test_weighted_symmetrize_canonicalizes_weights(self):
+        g = grid2d(8, 8, weighted=True, seed=0)
+        lay = build_layout(g, k=4, edge_tile=64, msg_tile=32)
+        # grid weights are drawn independently per direction
+        assert cache_lib.layout_is_symmetric(lay, weights=False)
+        assert not cache_lib.layout_is_symmetric(lay, weights=True)
+        gs = symmetrize(g)
+        lays = build_layout(gs, k=4, edge_tile=64, msg_tile=32)
+        assert cache_lib.layout_is_symmetric(lays, weights=True)
+
+    def test_symmetrize_takes_min_weight_per_pair(self):
+        from repro.graph import from_edges
+        g = from_edges([0, 1], [1, 0], n=2,
+                       weights=np.asarray([3.0, 1.0], np.float32))
+        gs = symmetrize(g)
+        assert gs.m == 2
+        assert np.allclose(gs.weights, [1.0, 1.0])
+
+    def test_directed_graph_detected(self, asym_layout):
+        assert not cache_lib.layout_is_symmetric(asym_layout, weights=False)
+
+
+# ----------------------------------------------------------------------
+# landmark-seeded warm start == cold start
+# ----------------------------------------------------------------------
+
+def _seed_sssp_from_landmark(layout, semantic, landmark_res, lm, src):
+    n_pad = layout.n_pad
+    full = np.full(n_pad, np.inf, np.float32)
+    full[:layout.n] = landmark_res["dist"]
+    semantic.put_state("sssp", {}, lm, {"dist": full},
+                       np.isfinite(full), {"dist": np.inf},
+                       iters=len(landmark_res["stats"]))
+    pick = semantic.best_landmark("sssp", {}, src, "dist")
+    assert pick is not None and pick[0] == lm
+    seed = semantic.expand(pick[1], "dist", np.inf) + np.float32(pick[2])
+    seed[src] = 0.0
+    return seed
+
+
+class TestSeededEqualsCold:
+    @pytest.mark.parametrize("fixture", ["sym_layout", "grid_layout"])
+    def test_sssp_seeded_matches_cold_within_1e6(self, fixture, request):
+        lay = request.getfixturevalue(fixture)
+        sem = cache_lib.SemanticCache(MemoryLRU(8), "t", lay.k, lay.q,
+                                      lay.n_pad)
+        lm, src = 0, min(17, lay.n - 1)
+        cold_lm = sssp_multi(lay, [lm])
+        seed = _seed_sssp_from_landmark(
+            lay, sem, {"dist": cold_lm["dist"][0],
+                       "stats": cold_lm["stats"]}, lm, src)
+        warm = sssp_multi(lay, [src], dist0=seed[None],
+                          frontier0=np.isfinite(seed)[None])
+        cold = sssp_multi(lay, [src])
+        w, c = warm["dist"][0], cold["dist"][0]
+        assert np.array_equal(np.isinf(w), np.isinf(c))
+        fin = np.isfinite(c)
+        assert np.abs(w[fin] - c[fin]).max() <= 1e-6
+        assert len(warm["stats"]) <= len(cold["stats"])
+
+    def test_seeded_bfs_cold_run_bitexact_with_stock(self, sym_layout):
+        sources = [0, 7, 99]
+        stock = bfs_multi(sym_layout, sources)
+        seeded = bfs_seeded_multi(sym_layout, sources)
+        assert np.array_equal(stock["level"], seeded["level"])
+        assert np.array_equal(stock["parent"], seeded["parent"])
+        assert len(stock["stats"]) == len(seeded["stats"])
+
+    @pytest.mark.parametrize("fixture", ["sym_layout", "grid_layout"])
+    def test_bfs_seeded_matches_cold_bitexact(self, fixture, request):
+        lay = request.getfixturevalue(fixture)
+        lm, src = 0, min(17, lay.n - 1)
+        cold_lm = bfs_multi(lay, [lm])
+        n_pad = lay.n_pad
+        B = 1
+        levels = np.full((B, n_pad), -1, np.int64)
+        lv = np.full(n_pad, -1, np.int64)
+        lv[:lay.n] = cold_lm["level"][0]
+        d_ls = int(lv[src])
+        if d_ls < 0:
+            pytest.skip("source unreachable from landmark in this graph")
+        lv[lv >= 0] += d_ls
+        lv[src] = 0
+        levels[0] = lv
+        parents = np.full((B, n_pad), -1, np.int64)
+        parents[0, src] = src
+        warm = bfs_seeded_multi(lay, [src], seed_levels=levels,
+                                seed_parents=parents,
+                                frontiers=(levels >= 0))
+        cold = bfs_multi(lay, [src])
+        assert np.array_equal(warm["level"], cold["level"])
+        assert np.array_equal(warm["parent"], cold["parent"])
+        assert len(warm["stats"]) <= len(cold["stats"])
+
+    def test_self_landmark_seeding_converges_immediately(self, grid_layout):
+        """An exact seed (the landmark itself) converges in one sweep —
+        the strongest iteration-savings case."""
+        lay = grid_layout
+        cold = sssp_multi(lay, [0])
+        sem = cache_lib.SemanticCache(MemoryLRU(8), "t", lay.k, lay.q,
+                                      lay.n_pad)
+        seed = _seed_sssp_from_landmark(lay, sem, {"dist": cold["dist"][0],
+                                                   "stats": cold["stats"]},
+                                        0, 0)
+        warm = sssp_multi(lay, [0], dist0=seed[None],
+                          frontier0=np.isfinite(seed)[None])
+        assert np.array_equal(warm["dist"][0], cold["dist"][0])
+        assert len(warm["stats"]) < len(cold["stats"])
+
+
+def test_seeded_equivalence_property():
+    """Hypothesis property: on random symmetrized graphs, landmark-seeded
+    BFS/SSSP equals cold start for every (landmark, source) pair drawn."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), lm=st.integers(0, 63),
+           src=st.integers(0, 63))
+    def prop(seed, lm, src):
+        g = symmetrize(rmat(6, 6, seed=seed, weighted=True))
+        lay = build_layout(g, k=4, edge_tile=64, msg_tile=32)
+        sem = cache_lib.SemanticCache(MemoryLRU(4), "t", lay.k, lay.q,
+                                      lay.n_pad)
+        cold_lm = sssp_multi(lay, [lm])
+        if not np.isfinite(cold_lm["dist"][0][src]):
+            return                      # disconnected pair: nothing to seed
+        sd = _seed_sssp_from_landmark(
+            lay, sem, {"dist": cold_lm["dist"][0],
+                       "stats": cold_lm["stats"]}, lm, src)
+        warm = sssp_multi(lay, [src], dist0=sd[None],
+                          frontier0=np.isfinite(sd)[None])
+        cold = sssp_multi(lay, [src])
+        w, c = warm["dist"][0], cold["dist"][0]
+        assert np.array_equal(np.isinf(w), np.isinf(c))
+        fin = np.isfinite(c)
+        assert np.abs(w[fin] - c[fin]).max() <= 1e-6
+
+    prop()
+
+
+# ----------------------------------------------------------------------
+# server integration
+# ----------------------------------------------------------------------
+
+class TestServerSemantics:
+    def _drain(self, srv, app, sources, qid0=0):
+        for i, s in enumerate(sources):
+            srv.submit(GraphQuery(qid=qid0 + i, app=app,
+                                  params={"source": int(s)}))
+        srv.run()
+        return {int(q.params["source"]): q.result for q in srv.done
+                if q.app == app}
+
+    @pytest.mark.parametrize("app", ["bfs", "sssp"])
+    def test_warm_queries_equal_cold(self, sym_layout, app):
+        cold_srv = GraphQueryServer(sym_layout, ServeConfig(semantic=False))
+        warm_srv = GraphQueryServer(sym_layout, ServeConfig())
+        self._drain(warm_srv, app, [5, 9])          # landmarks captured
+        warm = self._drain(warm_srv, app, [40, 77], qid0=10)
+        cold = self._drain(cold_srv, app, [40, 77])
+        for s in (40, 77):
+            if app == "bfs":
+                assert np.array_equal(warm[s]["level"], cold[s]["level"])
+                assert np.array_equal(warm[s]["parent"], cold[s]["parent"])
+            else:
+                w, c = warm[s]["dist"], cold[s]["dist"]
+                assert np.array_equal(np.isinf(w), np.isinf(c))
+                fin = np.isfinite(c)
+                assert np.abs(w[fin] - c[fin]).max() <= 1e-6
+        assert warm_srv.semantic_hits + warm_srv.semantic_misses > 0
+        assert warm_srv.semantic.landmarks(app, {})  # capture happened
+
+    def test_seeding_disabled_on_asymmetric_layout(self, asym_layout):
+        srv = GraphQueryServer(asym_layout, ServeConfig())
+        self._drain(srv, "sssp", [5, 9])
+        self._drain(srv, "sssp", [40], qid0=10)
+        # no landmark state, no semantic lookups on a directed graph
+        assert srv.semantic.landmarks("sssp", {}) == []
+        assert srv.semantic_hits == srv.semantic_misses == 0
+
+    def test_invalidation_on_swap_layout(self, sym_layout, grid_layout):
+        srv = GraphQueryServer(sym_layout, ServeConfig())
+        self._drain(srv, "sssp", [5, 9])
+        assert srv.semantic.landmarks("sssp", {})
+        srv.swap_layout(grid_layout)
+        assert len(srv.cache) == 0
+        assert srv.semantic.landmarks("sssp", {}) == []
+        # warm state never crosses layouts: fresh queries run cold+exact
+        warm = self._drain(srv, "sssp", [17], qid0=50)
+        ref = sssp(grid_layout, 17)
+        fin = np.isfinite(ref["dist"])
+        assert np.array_equal(np.isinf(warm[17]["dist"]),
+                              np.isinf(ref["dist"]))
+        assert np.abs(warm[17]["dist"][fin] - ref["dist"][fin]).max() \
+            <= 1e-6
+
+    def test_invalidation_on_clear_cache(self, sym_layout):
+        srv = GraphQueryServer(sym_layout, ServeConfig())
+        self._drain(srv, "bfs", [5, 9])
+        assert srv.semantic.landmarks("bfs", {})
+        srv.clear_cache()
+        assert len(srv.cache) == 0
+        assert srv.semantic.landmarks("bfs", {}) == []
+
+    def test_semantic_entries_respect_backend_capacity(self, sym_layout):
+        srv = GraphQueryServer(sym_layout,
+                               ServeConfig(cache_size=3, max_batch=4))
+        self._drain(srv, "bfs", [1, 2, 3, 4])
+        # 4 result entries + up to 4 semantic entries through capacity 3
+        assert len(srv.cache) <= 3
+        assert srv.cache.stats()["evictions"] > 0
+
+    def test_warmer_promotes_hot_sources(self, sym_layout):
+        srv = GraphQueryServer(
+            sym_layout, ServeConfig(capture_landmarks=False,
+                                    warm_threshold=2, warm_budget=4))
+        for i in range(3):
+            srv.submit(GraphQuery(qid=i, app="sssp",
+                                  params={"source": 123}))
+            srv.run()                   # idle at end of each run: warms
+        assert srv.semantic.landmarks("sssp", {}) == [123]
+        # the warmed landmark also memoized the exact result
+        key = cache_lib.result_key(srv._layout_tag, "sssp",
+                                   {"source": 123})
+        assert srv.cache.get(key) is not None
+
+    def test_disk_backed_server_cache(self, sym_layout, tmp_path):
+        path = str(tmp_path / "srvcache")
+        srv = GraphQueryServer(sym_layout,
+                               ServeConfig(cache_backend=path))
+        res = self._drain(srv, "sssp", [5])
+        # a second server over the SAME layout content reuses the disk
+        # entries (content-derived layout tag)
+        srv2 = GraphQueryServer(sym_layout,
+                                ServeConfig(cache_backend=path))
+        self._drain(srv2, "sssp", [5])
+        assert srv2.cache_hits == 1 and srv2.cache_misses == 0
+        got = srv2.done[0].result
+        assert np.allclose(got["dist"], res[5]["dist"], atol=0, rtol=0,
+                           equal_nan=True)
+
+
+class TestServeConfigShim:
+    def test_legacy_kwargs_warn_and_apply(self, sym_layout):
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            srv = GraphQueryServer(sym_layout, max_batch=8, cache_size=2)
+        assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+        assert srv.max_batch == 8 and srv.config.max_batch == 8
+        assert srv.cache_size == 2 and srv.config.cache_size == 2
+
+    def test_config_object_does_not_warn(self, sym_layout):
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            srv = GraphQueryServer(sym_layout, ServeConfig(max_batch=8))
+        assert not [w for w in rec
+                    if issubclass(w.category, DeprecationWarning)]
+        assert srv.max_batch == 8
+
+    def test_unknown_legacy_kwarg_raises(self, sym_layout):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with pytest.raises(TypeError, match="unknown"):
+                GraphQueryServer(sym_layout, bogus=1)
+
+    def test_config_is_dataclass_with_documented_fields(self):
+        names = {f.name for f in dataclasses.fields(ServeConfig)}
+        assert {"backend", "mode", "max_batch", "cache_size",
+                "cache_backend", "semantic", "capture_landmarks",
+                "seed_max_distance", "warm_threshold",
+                "warm_budget"} <= names

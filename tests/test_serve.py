@@ -272,9 +272,10 @@ def test_graph_server_lru_result_cache(glayout):
     srv.submit(GraphQuery(4, "bfs", {"source": s[0]}))   # evicted: rerun
     srv.run()
     assert srv.cache_misses == 4
-    # clear_cache() empties it (the layout-swap invalidation escape hatch)
+    # clear_cache() empties the backend (the invalidation rule is
+    # specified once, on the CacheBackend protocol)
     srv.clear_cache()
-    assert len(srv._result_cache) == 0
+    assert len(srv.cache) == 0
 
 
 def test_graph_server_dedicated_engine_does_not_poison_cache(glayout):
@@ -322,8 +323,8 @@ def test_graph_server_unhashable_params_skip_cache(glayout):
     srv.submit(GraphQuery(1, "nibble", {"seeds": [0, 1]}))
     srv.run()
     assert srv.cache_hits == 1               # list params canonicalized
-    assert srv._cache_key(GraphQuery(9, "nibble",
-                                     {"seeds": {0: 1}})) is None
+    assert srv._result_key(GraphQuery(9, "nibble",
+                                      {"seeds": {0: 1}})) is None
 
 
 def test_bench_serve_smoke(tmp_path):
@@ -340,3 +341,12 @@ def test_bench_serve_smoke(tmp_path):
     kernels = {r["kernel"] for r in rows}
     assert "serve_bfs_batched_b2" in kernels
     assert "serve_sssp_seq_b1" in kernels
+    # semantic-cache sweep: warmed repeat-source traffic must beat the
+    # cold server by a wide margin (the headroom is ~25x; 1.5x is the
+    # acceptance floor with room for CI noise)
+    wall = {r["kernel"]: r["wall_s"] for r in rows}
+    for app in ("bfs", "sssp"):
+        for b in (1, 2):
+            cold = wall[f"serve_{app}_cold_b{b}"]
+            warmed = wall[f"serve_{app}_warmed_b{b}"]
+            assert cold >= 1.5 * warmed, (app, b, cold, warmed)
