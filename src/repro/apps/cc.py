@@ -29,13 +29,36 @@ def cc_program() -> VertexProgram:
 
 def connected_components(layout, mode: str = "hybrid",
                          use_pallas: bool = None,
-                         backend=None, engine: Engine = None):
+                         backend=None, engine: Engine = None,
+                         resume_labels=None, touched=None):
+    """Labels per vertex; ``resume_labels=``/``touched=`` is the
+    incremental path after an insertion-only graph delta: the old
+    converged ``[n]`` labels resume with the delta-touched vertices
+    (``DeltaBuffer.touched()``) as the initial frontier.  Min-monoid
+    label propagation from a converged upper bound is exact — see
+    :meth:`repro.core.engine.Engine.run` — so the result is bit-identical
+    to a cold run on the new layout.  (Deletions can split components,
+    which would need labels to *rise*: run cold.)"""
     n_pad = layout.n_pad
-    label = jnp.arange(n_pad, dtype=jnp.uint32)
-    frontier = np.zeros(n_pad, bool)
-    frontier[:layout.n] = True
     eng = engine if engine is not None else Engine(
         layout, cc_program(), mode=mode, backend=backend,
         use_pallas=use_pallas)
-    state, _, stats = eng.run({"label": label}, frontier, max_iters=n_pad)
+    if (resume_labels is None) != (touched is None):
+        raise ValueError("resume_labels= and touched= go together")
+    if resume_labels is not None:
+        label = np.arange(n_pad, dtype=np.uint32)   # pads keep their ids
+        label[:layout.n] = np.asarray(resume_labels, np.uint32)[:layout.n]
+        t = np.asarray(touched, bool).reshape(-1)    # [n] or [n_pad]
+        frontier = np.zeros(n_pad, bool)
+        frontier[:min(t.size, n_pad)] = t[:n_pad]
+        frontier[layout.n:] = False
+        state, _, stats = eng.run(
+            resume_from={"label": jnp.asarray(label)}, touched=frontier,
+            max_iters=n_pad)
+    else:
+        label = jnp.arange(n_pad, dtype=jnp.uint32)
+        frontier = np.zeros(n_pad, bool)
+        frontier[:layout.n] = True
+        state, _, stats = eng.run({"label": label}, frontier,
+                                  max_iters=n_pad)
     return {"label": np.asarray(state["label"])[:layout.n], "stats": stats}

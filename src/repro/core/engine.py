@@ -331,9 +331,42 @@ class Engine:
         return jax.jit(step)
 
     # ------------------------------------------------------------------
-    def run(self, state, frontier, max_iters: int = 10_000,
-            until_empty: bool = True, collect_stats: bool = True):
-        """Host-driven loop: per-iteration mode decision (paper Eq. 1)."""
+    def run(self, state=None, frontier=None, max_iters: int = 10_000,
+            until_empty: bool = True, collect_stats: bool = True, *,
+            resume_from=None, touched=None):
+        """Host-driven loop: per-iteration mode decision (paper Eq. 1).
+
+        ``resume_from=``/``touched=`` is the incremental-recompute entry
+        point for dynamic graphs: pass a *previously converged* state
+        (from a run on the pre-delta layout) as ``resume_from`` and the
+        delta-touched vertices (``DeltaBuffer.touched()``) as ``touched``,
+        and the loop restarts from the old fixpoint with only the touched
+        vertices on the initial frontier.
+
+        Exactness contract: for a *min-monoid* program (BFS / SSSP / CC)
+        after an **insertion-only** delta this converges to exactly the
+        cold fixpoint of the new graph.  The old fixpoint satisfies every
+        old edge, insertions can only *lower* the least fixpoint, so the
+        old state is a pointwise upper bound whose only violated
+        constraints start at touched vertices — relaxation from there
+        repairs every consequence and, by the least-fixpoint uniqueness
+        argument (see :mod:`repro.serve.cache`), lands bit-exactly on the
+        cold answer.  After deletions values may need to *rise*, which
+        monotone relaxation cannot do: run cold instead.  Non-min monoids
+        (PageRank) resume via residuals — a warm init reaches the unique
+        damping-contraction fixpoint in fewer sweeps (see
+        :func:`repro.apps.pagerank.pagerank`'s ``pr0``)."""
+        if resume_from is not None:
+            if state is not None:
+                raise ValueError("pass either state= or resume_from=, "
+                                 "not both")
+            if touched is None:
+                raise ValueError("resume_from= needs touched= (the "
+                                 "delta-touched initial frontier)")
+            state, frontier = resume_from, touched
+        if state is None or frontier is None:
+            raise ValueError("run() needs state+frontier (or "
+                             "resume_from=+touched=)")
         active = jnp.asarray(frontier, jnp.bool_)
         stats = []
         for it in range(max_iters):

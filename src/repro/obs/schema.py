@@ -117,6 +117,20 @@ EVENT_SCHEMA = {
         "layout_swap": {
             "required": {"old": "str", "new": "str"},
         },
+        # apply_delta relayouted a graph delta (dirty partitions only)
+        "delta_apply": {
+            "required": {"dirty_parts": "int", "k": "int",
+                         "inserts": "int", "deletes": "int",
+                         "wall_s": "float"},
+        },
+        # an epoch-tagged layout swap: scoped invalidation accounting
+        # (changed_parts = partitions whose content tag changed; evicted /
+        # migrated = old-tag cache entries dropped / re-keyed)
+        "epoch_swap": {
+            "required": {"old": "str", "new": "str", "epoch": "int",
+                         "delta": "bool", "changed_parts": "int",
+                         "evicted": "int", "migrated": "int"},
+        },
         # one benchmark row (per-row timings from benchmarks/*)
         "bench_row": {
             "required": {"kernel": "str", "backend": "str",

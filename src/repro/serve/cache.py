@@ -30,10 +30,27 @@ single backend instance may serve both):
       (``extra params`` = everything except the source, e.g. SSSP with a
       custom ``max_iters``, or ``damping`` for PageRank vectors).
 
-``<layout>`` is the server's layout-identity tag: the invalidation rule
-is specified ONCE, on the protocol — :meth:`CacheBackend.clear` drops
-every entry, and the serve tier calls it from ``clear_cache()`` and
-``swap_layout()`` (cache entries never outlive the resident layout).
+``<layout>`` is the server's *content-derived* layout tag
+(:func:`layout_tag`), so the invalidation rule is **scoped, not
+wholesale**:
+
+* a plain ``swap_layout(new)`` evicts *nothing* — entries are invisible
+  under the new tag's key namespace but stay resident, so swapping back
+  to a layout the backend has seen (A -> B -> A) revalidates its entries
+  for free;
+* a delta swap (``swap_layout(new, delta=...)``) evicts only what the
+  delta actually invalidated: the old tag's exact-match ``res|`` entries
+  (a global answer is stale under any edge edit) and the ``sem|``
+  entries whose stored partitions intersect a partition whose content
+  tag (:func:`partition_tags`) changed; clean-partition entries of an
+  insertion-only delta are *migrated* to the new tag (still-sound
+  upper-bound seeds — see ``serve/engine.py``);
+* wholesale :meth:`CacheBackend.clear` remains the contract of
+  ``clear_cache()`` only.
+
+Prefix-scoped eviction is part of the protocol
+(:meth:`CacheBackend.evict_prefix`, with a ``keys()``-scan default), so
+backends can specialize it without the serve tier caring.
 
 Why landmark seeding is exactly correct (monotone min-monoids)
 --------------------------------------------------------------
@@ -70,9 +87,10 @@ Async warming
 :class:`CacheWarmer` turns query-log statistics (per-app source
 frequencies, mirrored into :mod:`repro.obs` as the ``serve.source_freq``
 counter) into landmark precomputation jobs.  The serve tier drains a
-bounded number of jobs *between* :meth:`GraphQueryServer.step` drains,
-so warming rides the scheduler's idle edges instead of a query's
-latency path.
+small fixed budget of jobs at the end of *every*
+:meth:`GraphQueryServer.step` tick — bounded, so the latency tax per
+tick is capped, but unconditional, so sustained traffic (exactly the
+regime that produces hot sources) cannot starve warming.
 """
 from __future__ import annotations
 
@@ -158,9 +176,14 @@ class CacheBackend(Protocol):
     * ``put(key, value)`` — inserts/overwrites, evicting least-recently
       -used entries beyond ``capacity``;
     * ``evict(key) -> bool`` — targeted drop, True when present;
-    * ``clear()`` — drop everything.  **This is the invalidation rule**:
-      the serve tier's ``clear_cache()`` / ``swap_layout()`` call it, so
-      no entry ever outlives the resident layout;
+    * ``evict_prefix(prefix) -> int`` — drop every key under a prefix,
+      returning the count.  **This is the serve tier's invalidation
+      primitive**: ``swap_layout(delta=...)`` evicts only the old layout
+      tag's superseded prefixes (see the module docstring) instead of
+      clearing the backend;
+    * ``clear()`` — drop everything.  The contract of ``clear_cache()``
+      *only*: layout swaps must never call it, because entries keyed
+      under other layout tags stay valid for those layouts;
     * ``keys() -> list[str]`` — snapshot in LRU order (oldest first);
     * ``stats() -> dict`` — at least ``hits / misses / puts / evictions
       / entries``;
@@ -170,10 +193,24 @@ class CacheBackend(Protocol):
     def get(self, key: str) -> Optional[dict]: ...
     def put(self, key: str, value: dict) -> None: ...
     def evict(self, key: str) -> bool: ...
+    def evict_prefix(self, prefix: str) -> int: ...
     def clear(self) -> None: ...
     def keys(self) -> list: ...
     def stats(self) -> dict: ...
     def __len__(self) -> int: ...
+
+
+def evict_prefix(backend, prefix: str) -> int:
+    """Prefix eviction against any backend: dispatches to the backend's
+    own ``evict_prefix`` when it has one, otherwise falls back to a
+    ``keys()`` scan — so structural third-party backends that predate the
+    protocol method still work under scoped invalidation."""
+    fn = getattr(backend, "evict_prefix", None)
+    if fn is not None:
+        return int(fn(prefix))
+    return sum(1 for key in list(backend.keys())
+               if isinstance(key, str) and key.startswith(prefix)
+               and backend.evict(key))
 
 
 class _StatsBase:
@@ -190,6 +227,14 @@ class _StatsBase:
         return {"hits": self._hits, "misses": self._misses,
                 "puts": self._puts, "evictions": self._evictions,
                 "entries": len(self)}
+
+    def evict_prefix(self, prefix: str) -> int:
+        """Default ``keys()``-scan implementation of the protocol's
+        prefix eviction; backends with an indexed key space may
+        override."""
+        return sum(1 for key in list(self.keys())
+                   if isinstance(key, str) and key.startswith(prefix)
+                   and self.evict(key))
 
 
 class MemoryLRU(_StatsBase):
@@ -248,6 +293,14 @@ class DiskCache(_StatsBase):
     plus an append-only JSONL operation log (``index.jsonl``) that is
     replayed on construction, so a warm cache survives process restarts.
 
+    The op-log is *compacted* on open whenever it has grown well past the
+    live entry count (heavy put/evict churn appends one record per op and
+    never rewrites): the replayed state is rewritten atomically as one
+    ``put`` record per live entry, and any ``.npz`` payload in the
+    directory that no live entry references (crashed writes, records
+    dropped by a ``clear``) is unlinked.  Steady-state disk usage is
+    therefore O(live entries), not O(operation history).
+
     Array leaves of the value dict are stored in the npz (bit-exact
     round-trip, no pickling); every other leaf goes through JSON —
     dataclasses and tuples come back as plain dicts / lists, which is
@@ -255,6 +308,10 @@ class DiskCache(_StatsBase):
     ``/`` separators on the npz side."""
 
     _ARRAY = "a/"          # npz member prefix for array leaves
+    # compact when the op-log is both non-trivial and dominated by dead
+    # records: ops > max(COMPACT_MIN_OPS, COMPACT_FACTOR * live entries)
+    COMPACT_MIN_OPS = 16
+    COMPACT_FACTOR = 4
 
     def __init__(self, path, capacity: int = 64):
         super().__init__()
@@ -264,12 +321,17 @@ class DiskCache(_StatsBase):
         self._index = os.path.join(self.path, "index.jsonl")
         self._d: "collections.OrderedDict[str, str]" = \
             collections.OrderedDict()        # key -> npz filename
-        self._replay()
+        n_ops = self._replay()
+        if n_ops > max(self.COMPACT_MIN_OPS,
+                       self.COMPACT_FACTOR * len(self._d)):
+            self._compact()
 
     # ---- op-log persistence ----
-    def _replay(self):
+    def _replay(self) -> int:
+        """Rebuild the index from the op-log; returns the op count."""
         if not os.path.exists(self._index):
-            return
+            return 0
+        n_ops = 0
         with open(self._index) as f:
             for line in f:
                 line = line.strip()
@@ -279,6 +341,7 @@ class DiskCache(_StatsBase):
                     rec = json.loads(line)
                 except json.JSONDecodeError:
                     continue                  # torn tail write
+                n_ops += 1
                 op = rec.get("op")
                 if op == "put":
                     self._d[rec["key"]] = rec["file"]
@@ -291,6 +354,24 @@ class DiskCache(_StatsBase):
         for k in [k for k, fn in self._d.items()
                   if not os.path.exists(os.path.join(self.path, fn))]:
             del self._d[k]
+        return n_ops
+
+    def _compact(self):
+        """Rewrite the op-log as one ``put`` per live entry (atomically,
+        via a tmp file + rename) and unlink payloads no entry references."""
+        now = time.time()
+        tmp = self._index + ".tmp"
+        with open(tmp, "w") as f:
+            for key, fname in self._d.items():     # LRU order preserved
+                f.write(json.dumps({"op": "put", "key": key,
+                                    "file": fname, "ts": now}) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._index)
+        live = set(self._d.values())
+        for fname in os.listdir(self.path):
+            if fname.endswith(".npz") and fname not in live:
+                self._unlink(fname)
 
     def _log(self, rec: dict):
         with open(self._index, "a") as f:
@@ -554,9 +635,11 @@ class CacheWarmer:
     deque; :meth:`drain` pops up to ``budget`` jobs and runs the cold
     computation through a caller-supplied ``compute(app, extra, source)``
     callback that converges the state and stores it into the semantic
-    cache.  The serve tier calls ``scan() + drain()`` between
-    :meth:`GraphQueryServer.step` drains — warming never rides a query's
-    latency path."""
+    cache.  The serve tier calls ``scan() + drain()`` at the end of
+    every :meth:`GraphQueryServer.step` tick — the small fixed budget
+    bounds the per-tick latency tax, and running it unconditionally
+    (instead of only on idle ticks) keeps sustained traffic from
+    starving the warmer forever."""
 
     def __init__(self, semantic: SemanticCache, threshold: int = 3,
                  budget: int = 1, max_pending: int = 64):
@@ -674,3 +757,42 @@ def layout_tag(layout) -> str:
     if layout.csr_w is not None:
         h.update(np.ascontiguousarray(layout.csr_w).tobytes())
     return h.hexdigest()[:16]
+
+
+def partition_tags(layout) -> list:
+    """Per-partition content tags: ``tags[p]`` changes iff partition
+    ``p``'s out-edges *or* in-edges (with weights) changed.
+
+    This is the scope of delta invalidation: a partition's converged
+    state can only be perturbed directly through its own adjacency, so a
+    semantic-cache entry whose stored partitions all kept their tags
+    survives the swap (as a still-sound upper bound for insertion-only
+    deltas — the migration rule in ``serve/engine.py``).  ``apply_delta``
+    reuses clean partitions' CSR slices verbatim, which is what makes
+    these tags stable across small deltas by construction."""
+    n, k, q = layout.n, layout.k, layout.q
+    indptr = np.asarray(layout.csr_indptr)[:n + 1]
+    indices = np.asarray(layout.csr_indices)
+    w = None if layout.csr_w is None else np.asarray(layout.csr_w)
+    degs = np.diff(indptr)
+    src = np.repeat(np.arange(n, dtype=np.int64), degs)
+    dp = (indices.astype(np.int64) // q if q
+          else np.zeros(len(indices), np.int64))
+    in_order = np.argsort(dp, kind="stable")
+    in_start = np.searchsorted(dp[in_order], np.arange(k + 1))
+    tags = []
+    for p in range(k):
+        vs, ve = min(p * q, n), min((p + 1) * q, n)
+        e0, e1 = int(indptr[vs]), int(indptr[ve])
+        h = hashlib.sha1()
+        h.update(np.ascontiguousarray(degs[vs:ve]).tobytes())
+        h.update(np.ascontiguousarray(indices[e0:e1]).tobytes())
+        if w is not None:
+            h.update(np.ascontiguousarray(w[e0:e1]).tobytes())
+        sel = in_order[in_start[p]:in_start[p + 1]]
+        h.update(np.ascontiguousarray(src[sel]).tobytes())
+        h.update(np.ascontiguousarray(indices[sel]).tobytes())
+        if w is not None:
+            h.update(np.ascontiguousarray(w[sel]).tobytes())
+        tags.append(h.hexdigest()[:16])
+    return tags

@@ -33,17 +33,36 @@ continuous-batching idea to PPM queries over one resident layout:
     An async :class:`repro.serve.cache.CacheWarmer` turns repeated
     sources into precomputed landmarks on idle scheduler ticks.
 
-    **Invalidation rules** (specified once, on the backend protocol —
-    :meth:`repro.serve.cache.CacheBackend.clear`):
+    **Invalidation rules** (scoped per layout tag + epoch semantics):
 
-    - entries are keyed by the resident layout's content tag; the server
-      serves exactly one resident layout and never mutates it in place;
-    - :meth:`GraphQueryServer.clear_cache` and
-      :meth:`GraphQueryServer.swap_layout` call ``backend.clear()`` —
-      *both* exact results and semantic landmark state are dropped
-      wholesale (a seeded query must never read state from a previous
-      layout), the warmer's frequency statistics and pending jobs are
-      reset, and the old layout's metric series are reset with them;
+    - entries are keyed by the resident layout's *content* tag; the
+      server serves exactly one resident layout per epoch and never
+      mutates it in place;
+    - :meth:`GraphQueryServer.clear_cache` is the ONLY wholesale
+      invalidation (``backend.clear()``);
+    - :meth:`GraphQueryServer.swap_layout` starts a new epoch: in-flight
+      queries drain on the old layout first (the old binding is the read
+      buffer until the new one binds), then the epoch counter bumps and
+      the shared engines / warmer statistics / old-tag metric series
+      reset.  A *plain* swap evicts **nothing** — entries under other
+      tags are simply invisible until their layout returns (A -> B -> A
+      revalidates A's entries for free);
+    - a *delta* swap (``swap_layout(new, delta=...)`` with the
+      :class:`repro.graph.delta.DeltaBuffer` that produced ``new``)
+      additionally garbage-collects what the delta invalidated, scoped
+      by per-partition content tags
+      (:func:`repro.serve.cache.partition_tags`): the old tag's ``res|``
+      entries are evicted via :meth:`CacheBackend.evict_prefix` (a
+      global answer is stale under any edge edit), and old ``sem|``
+      entries are evicted only when their stored partitions intersect a
+      changed partition tag — clean-partition entries of an
+      insertion-only delta are *migrated* (re-keyed) to the new tag,
+      where they remain sound seeds: inserting edges can only lower
+      min-monoid distances, so the old converged state stays a pointwise
+      upper bound of the new fixpoint and seeded relaxation corrects it
+      exactly.  Deltas with deletions evict every old-tag ``sem|`` entry
+      (deletions can *raise* distances; an under-bound seed would be
+      believed, not corrected);
     - semantic entries are additionally gated at *read* time: seeding is
       skipped entirely on asymmetric graphs (auto-detected per layout:
       structure for BFS, structure + weights for SSSP) and under
@@ -418,9 +437,11 @@ class GraphQueryServer:
     ``(app, params)`` queries are memoized as exact-match entries in the
     cache backend; BFS/SSSP misses near a cached landmark run
     landmark-seeded (see the module docstring for the caching design and
-    the invalidation rules).  After the tick, if the queue is empty, the
-    async warmer gets one bounded drain — landmark precomputation rides
-    the scheduler's idle edges, never a query's latency path.  Queries
+    the invalidation rules).  After every tick the async warmer gets a
+    small fixed budget (``ServeConfig.warm_budget`` jobs) — bounded so a
+    drain taxes one tick by at most that many cold runs, but never
+    skipped, so sustained traffic (exactly when hot sources exist)
+    cannot starve landmark precomputation.  Queries
     overriding ``mode`` / ``backend`` / ``bw_ratio`` run on a dedicated
     engine and never touch the shared engine cache.
     """
@@ -491,6 +512,9 @@ class GraphQueryServer:
         # latencies must never aggregate across incompatible layouts
         # (cache keys are layout-identity too — same invalidation rule)
         self._layout_tag = cache_lib.layout_tag(layout)
+        #: monotone swap counter; queries admitted before a swap drain on
+        #: the old layout (epoch N), queries after run on the new (N+1)
+        self.epoch = 0
         self._bind_layout()
 
     def _bind_layout(self):
@@ -582,8 +606,9 @@ class GraphQueryServer:
 
     def clear_cache(self):
         """Invalidate everything: one :meth:`CacheBackend.clear` drops
-        exact results AND semantic landmark state (the rule is specified
-        on the protocol), and the warmer forgets its statistics."""
+        exact results AND semantic landmark state — the only wholesale
+        invalidation in the serve tier (layout swaps are scoped, see
+        :meth:`swap_layout`) — and the warmer forgets its statistics."""
         self.cache.clear()
         if self.warmer is not None:
             self.warmer.reset()
@@ -591,22 +616,80 @@ class GraphQueryServer:
         if obs.enabled():
             obs.event("cache_clear", layout=self._layout_tag)
 
-    def swap_layout(self, layout, sharded=None, mesh=None):
-        """Re-point the server at a new resident layout.
+    def _scoped_invalidate(self, old_layout, old_tag, new_layout, new_tag,
+                           delta):
+        """Delta-swap garbage collection, scoped by per-partition content
+        tags.  Returns ``(evicted, migrated, changed_parts)``.
 
-        Every cached entry — exact results and semantic landmark state
-        alike — is keyed on layout identity, so the backend is cleared
-        wholesale (``backend.clear()``: a seeded query must never read
-        warm state from a previous layout) and the shared engines are
-        dropped; the warmer's source statistics and the metric series of
-        the old layout are reset too (hit ratios across incompatible
-        layouts are meaningless).  The new layout gets a fresh content
-        tag and fresh symmetry flags, so its series start clean."""
+        The old tag's ``res|`` prefix is always evicted (an exact global
+        answer is stale under any edge edit).  A ``sem|`` landmark entry
+        is judged by the partitions it stores: if the delta is
+        insertion-only and none of them changed tag, the entry is
+        *migrated* — re-keyed under the new tag, where its state is still
+        a pointwise upper bound of every new fixpoint (insertions only
+        lower min-monoid distances), i.e. exactly what a seed needs to
+        be.  Everything else under ``sem|<old>|`` is evicted."""
+        old_ptags = cache_lib.partition_tags(old_layout)
+        new_ptags = cache_lib.partition_tags(new_layout)
+        changed = {p for p, (a, b) in enumerate(zip(old_ptags, new_ptags))
+                   if a != b}
+        evicted = cache_lib.evict_prefix(self.cache, f"res|{old_tag}|")
+        migratable = delta.insertions_only
+        sem_prefix = f"sem|{old_tag}|"
+        migrated = 0
+        for key in list(self.cache.keys()):
+            if not isinstance(key, str) or not key.startswith(sem_prefix):
+                continue
+            entry = self.cache.get(key) if migratable else None
+            if entry is not None:
+                parts = set(np.asarray(entry.get("parts", ())).tolist())
+                if not (parts & changed):
+                    new_key = f"sem|{new_tag}|" + key[len(sem_prefix):]
+                    self.cache.put(new_key, entry)
+                    self.cache.evict(key)
+                    migrated += 1
+                    continue
+            if self.cache.evict(key):
+                evicted += 1
+        return evicted, migrated, changed
+
+    def swap_layout(self, layout, sharded=None, mesh=None, delta=None):
+        """Re-point the server at a new resident layout (a new epoch).
+
+        Double-buffered: queued queries admitted under the old epoch are
+        drained on the old layout *first* (it stays the read buffer until
+        the new one binds), then the epoch counter bumps, the shared
+        engines are dropped, and the warmer statistics / old-tag metric
+        series reset (hit ratios across incompatible layouts are
+        meaningless).
+
+        Invalidation is **scoped**, never wholesale (that is
+        :meth:`clear_cache`'s job): with ``delta=None`` nothing is
+        evicted — every entry is keyed by content tag, so entries of
+        other layouts are merely invisible until their layout returns.
+        With ``delta=`` the :class:`repro.graph.delta.DeltaBuffer` that
+        produced ``layout`` (usually via
+        :func:`repro.graph.delta.apply_delta`), the old tag's superseded
+        entries are garbage-collected and clean-partition landmarks of an
+        insertion-only delta are migrated to the new tag — see
+        :meth:`_scoped_invalidate` for the soundness argument."""
         if (sharded is None) != (mesh is None):
             raise ValueError("distributed serving needs BOTH sharded and "
                              "mesh (or neither)")
-        old = self._layout_tag
-        self.cache.clear()
+        if delta is not None and (delta.k != layout.k
+                                  or delta.q != layout.q
+                                  or delta.n != layout.n):
+            raise ValueError("delta partitioning does not match the new "
+                             "layout (deltas never change k/q/n)")
+        if self.queue:
+            self.run()                 # drain epoch N on the old layout
+        old_layout, old_tag = self.layout, self._layout_tag
+        new_tag = cache_lib.layout_tag(layout)
+        evicted = migrated = 0
+        changed = set()
+        if delta is not None:
+            evicted, migrated, changed = self._scoped_invalidate(
+                old_layout, old_tag, layout, new_tag, delta)
         self._engines = {}
         if self.warmer is not None:
             self.warmer.reset()
@@ -616,10 +699,15 @@ class GraphQueryServer:
         self.mesh = mesh
         self.config = dataclasses.replace(self.config, sharded=sharded,
                                           mesh=mesh)
-        self._layout_tag = cache_lib.layout_tag(layout)
+        self._layout_tag = new_tag
         self._bind_layout()
+        self.epoch += 1
         if obs.enabled():
-            obs.event("layout_swap", old=old, new=self._layout_tag)
+            obs.event("layout_swap", old=old_tag, new=new_tag)
+            obs.event("epoch_swap", old=old_tag, new=new_tag,
+                      epoch=self.epoch, delta=delta is not None,
+                      changed_parts=len(changed), evicted=evicted,
+                      migrated=migrated)
 
     # ---- batching ------------------------------------------------------
     def _batch_sig(self, q: GraphQuery):
@@ -883,9 +971,13 @@ class GraphQueryServer:
             self.cache.put(key, row)
 
     def _maybe_warm(self):
-        """Drain a bounded number of warm jobs, only on idle ticks (an
-        empty queue): warming must never ride a query's latency path."""
-        if self.warmer is None or self.queue:
+        """Give the warmer its per-tick budget (``ServeConfig
+        .warm_budget`` jobs) after every :meth:`step` drain.  The budget
+        runs whether or not the queue is empty — the old idle-only rule
+        starved warming forever under sustained traffic, which is exactly
+        when hot sources exist; a small fixed budget bounds the latency
+        tax per tick instead."""
+        if self.warmer is None:
             return
         self.warmer.scan()
         if self.warmer.pending:
@@ -904,8 +996,8 @@ class GraphQueryServer:
     def step(self) -> bool:
         """One scheduler tick: answer the head query — together with every
         queued query batchable with it when its app supports batching —
-        consulting the result cache first; when the tick empties the
-        queue, give the async warmer a bounded drain."""
+        consulting the result cache first; every tick ends with the
+        async warmer's bounded per-tick budget."""
         if not self.queue:
             return False
         q = self.queue.popleft()

@@ -1,0 +1,536 @@
+"""Dynamic-graph deltas: DeltaBuffer bookkeeping, apply_delta exactness,
+incremental recompute, and epoch-tagged serving with scoped invalidation.
+
+The central contract under test (see repro/graph/delta.py):
+
+  apply_delta(layout, delta) is BIT-IDENTICAL — every Layout field,
+  dtype, shape and value — to build_layout(delta.edit_graph(g), ...)
+  with the same partitioning and tile geometry.  Clean partitions'
+  slices are reused verbatim; only dirty partitions relayout.
+
+and the incremental-recompute contract (repro/core/engine.py):
+
+  after an insertion-only delta, resuming a min-monoid fixpoint from
+  the old converged state with the delta-touched vertices as frontier
+  is exact (bit-exact labels/levels, <= 1e-6 for f32 distances);
+  PageRank restarts from the old vector and reconverges to the same
+  unique fixpoint in fewer sweeps.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.apps import (bfs_multi, bfs_seeded_multi, connected_components,
+                        pagerank, sssp_multi)
+from repro.graph import (DeltaBuffer, apply_delta, build_layout, from_edges,
+                         grid2d, rmat, symmetrize)
+from repro.obs import schema as obs_schema
+from repro.serve import (DiskCache, GraphQuery, GraphQueryServer,
+                         ServeConfig)
+from repro.serve import cache as cache_lib
+
+
+# ----------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------
+
+def assert_layouts_identical(a, b):
+    """Every field of the Layout dataclass: equal dtype, shape, value."""
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if va is None or isinstance(va, (int, bool, np.integer)):
+            assert va == vb, f.name
+            continue
+        va, vb = np.asarray(va), np.asarray(vb)
+        assert va.dtype == vb.dtype, f.name
+        assert va.shape == vb.shape, f.name
+        assert np.array_equal(va, vb), f.name
+
+
+def _rand_graph(rng, n, weighted):
+    m = int(rng.integers(0, 4 * n + 1))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.random(m).astype(np.float32) + 0.1 if weighted else None
+    return from_edges(src, dst, n=n, weights=w)
+
+
+def _rand_delta(rng, lay, n_ops, insert_only=False, weighted=None):
+    weighted = lay.weighted if weighted is None else weighted
+    d = DeltaBuffer.for_layout(lay)
+    for _ in range(n_ops):
+        u = int(rng.integers(0, lay.n))
+        v = int(rng.integers(0, lay.n))
+        if insert_only or rng.random() < 0.7:
+            d.insert(u, v, float(rng.random() + 0.1) if weighted else None)
+        else:
+            d.delete(u, v)
+    return d
+
+
+def _sym_insert(d, rng, n, weighted):
+    u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+    w = float(rng.random() + 0.05) if weighted else None
+    d.insert(u, v, w)
+    d.insert(v, u, w)
+
+
+@pytest.fixture(scope="module")
+def sym_layout():
+    g = symmetrize(rmat(8, 8, seed=3, weighted=True))
+    return build_layout(g, k=8, edge_tile=64, msg_tile=32)
+
+
+# ----------------------------------------------------------------------
+# DeltaBuffer bookkeeping
+# ----------------------------------------------------------------------
+
+class TestDeltaBuffer:
+    def test_bucketing_and_counts(self, sym_layout):
+        d = DeltaBuffer.for_layout(sym_layout)
+        assert not d and len(d) == 0 and d.insertions_only
+        d.insert(0, 1, 2.0).insert(5, 200, 1.0).delete(3, 4)
+        assert len(d) == 3 and bool(d)
+        assert d.num_inserts == 2 and d.num_deletes == 1
+        assert not d.insertions_only
+
+    def test_last_op_wins(self, sym_layout):
+        d = DeltaBuffer.for_layout(sym_layout)
+        d.insert(0, 1, 2.0).delete(0, 1)
+        assert len(d) == 1 and d.num_deletes == 1 and d.num_inserts == 0
+        d.insert(0, 1, 7.0)                      # resurrect with new weight
+        assert d.num_inserts == 1 and d.num_deletes == 0
+        s, t, w = d.inserts()
+        assert list(s) == [0] and list(t) == [1] and list(w) == [7.0]
+
+    def test_partition_sets_and_touched(self, sym_layout):
+        q, k, n = sym_layout.q, sym_layout.k, sym_layout.n
+        u, v = 1, min(n - 1, 3 * q + 2)          # distinct partitions
+        d = DeltaBuffer.for_layout(sym_layout).insert(u, v, 1.0)
+        assert list(d.src_partitions()) == [u // q]
+        assert list(d.dst_partitions()) == [v // q]
+        assert list(d.dirty_partitions()) == sorted({u // q, v // q})
+        t = d.touched()
+        assert t.shape == (k * q,) and t.dtype == np.bool_
+        assert set(np.nonzero(t)[0]) == {u, v}
+
+    def test_id_validation(self, sym_layout):
+        d = DeltaBuffer.for_layout(sym_layout)
+        with pytest.raises(ValueError):
+            d.insert(0, sym_layout.n)
+        with pytest.raises(ValueError):
+            d.delete(-1, 0)
+
+    def test_edit_graph_reference_semantics(self):
+        g = from_edges([0, 1, 2], [1, 2, 0], n=4,
+                       weights=np.asarray([1., 2., 3.], np.float32))
+        lay = build_layout(g, k=2, edge_tile=8, msg_tile=8)
+        d = DeltaBuffer.for_layout(lay)
+        d.delete(1, 2)                           # drop an edge
+        d.insert(0, 1, 9.0)                      # overwrite a weight
+        d.insert(3, 0, 4.0)                      # brand new edge
+        g2 = d.edit_graph(g)
+        pairs = {}
+        src = np.repeat(np.arange(g2.n), g2.out_degrees())
+        for s, t, w in zip(src, g2.indices, g2.weights):
+            pairs[(int(s), int(t))] = float(w)
+        assert pairs == {(0, 1): 9.0, (2, 0): 3.0, (3, 0): 4.0}
+
+
+# ----------------------------------------------------------------------
+# apply_delta == full rebuild, bit-exact
+# ----------------------------------------------------------------------
+
+class TestApplyDeltaExact:
+    def _check(self, g, lay, d):
+        inc = apply_delta(lay, d)
+        full = build_layout(d.edit_graph(g), k=lay.k,
+                           edge_tile=lay.edge_tile, msg_tile=lay.msg_tile,
+                           fold_tile=lay.fold_tile, fold_q=lay.fold_q)
+        assert_layouts_identical(inc, full)
+        return inc
+
+    def test_single_insert(self):
+        g = from_edges([0, 1], [1, 2], n=6)
+        lay = build_layout(g, k=2, edge_tile=8, msg_tile=8)
+        d = DeltaBuffer.for_layout(lay).insert(4, 0)
+        self._check(g, lay, d)
+
+    def test_single_delete(self):
+        g = from_edges([0, 1, 4], [1, 2, 0], n=6)
+        lay = build_layout(g, k=2, edge_tile=8, msg_tile=8)
+        d = DeltaBuffer.for_layout(lay).delete(1, 2)
+        self._check(g, lay, d)
+
+    def test_weight_overwrite(self):
+        g = from_edges([0, 1], [1, 2], n=6,
+                       weights=np.asarray([1., 2.], np.float32))
+        lay = build_layout(g, k=2, edge_tile=8, msg_tile=8)
+        d = DeltaBuffer.for_layout(lay).insert(0, 1, 5.0)
+        inc = self._check(g, lay, d)
+        assert inc.m == lay.m                    # no new edge, new weight
+
+    def test_empty_delta_is_identity(self, sym_layout):
+        d = DeltaBuffer.for_layout(sym_layout)
+        assert_layouts_identical(apply_delta(sym_layout, d), sym_layout)
+
+    def test_delete_only_edge_of_partition(self):
+        g = from_edges([0, 5], [5, 0], n=8)
+        lay = build_layout(g, k=4, edge_tile=8, msg_tile=8)
+        d = DeltaBuffer.for_layout(lay).delete(5, 0)
+        self._check(g, lay, d)
+
+    def test_mismatched_partitioning_rejected(self, sym_layout):
+        other = DeltaBuffer(k=sym_layout.k + 1, q=sym_layout.q,
+                            n=sym_layout.n)
+        with pytest.raises(ValueError):
+            apply_delta(sym_layout, other)
+
+    @pytest.mark.parametrize("weighted", [False, True])
+    def test_randomized_mixed_deltas(self, weighted):
+        rng = np.random.default_rng(11 + weighted)
+        for trial in range(12):
+            n = int(rng.integers(1, 60))
+            g = _rand_graph(rng, n, weighted)
+            k = int(rng.integers(1, 9))
+            et = int(rng.choice([1, 4, 16]))
+            mt = int(rng.choice([1, 2, 8]))
+            lay = build_layout(g, k=k, edge_tile=et, msg_tile=mt)
+            d = _rand_delta(rng, lay, int(rng.integers(1, 12)))
+            self._check(g, lay, d)
+
+    def test_dirty_set_matches_changed_partition_tags(self, sym_layout):
+        """partition_tags flips exactly on delta.dirty_partitions() —
+        the alignment the serve tier's scoped invalidation relies on."""
+        rng = np.random.default_rng(7)
+        d = _rand_delta(rng, sym_layout, 4, insert_only=True)
+        new = apply_delta(sym_layout, d)
+        old_t = cache_lib.partition_tags(sym_layout)
+        new_t = cache_lib.partition_tags(new)
+        changed = {p for p, (a, b) in enumerate(zip(old_t, new_t))
+                   if a != b}
+        assert changed <= set(d.dirty_partitions().tolist())
+        # a genuinely new edge always flips its endpoint partitions
+        assert changed
+
+
+def test_apply_delta_property():
+    """Hypothesis: random graph x random delta -> apply_delta bit-equals
+    the full rebuild, and insert-only deltas keep CC resume exact."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16), n=st.integers(1, 40),
+           k=st.integers(1, 6), n_ops=st.integers(1, 8),
+           weighted=st.booleans())
+    def prop(seed, n, k, n_ops, weighted):
+        rng = np.random.default_rng(seed)
+        g = _rand_graph(rng, n, weighted)
+        lay = build_layout(g, k=k, edge_tile=4, msg_tile=4)
+        d = _rand_delta(rng, lay, n_ops)
+        inc = apply_delta(lay, d)
+        full = build_layout(d.edit_graph(g), k=lay.k,
+                            edge_tile=lay.edge_tile,
+                            msg_tile=lay.msg_tile,
+                            fold_tile=lay.fold_tile, fold_q=lay.fold_q)
+        assert_layouts_identical(inc, full)
+
+    prop()
+
+
+# ----------------------------------------------------------------------
+# incremental recompute: resume == cold
+# ----------------------------------------------------------------------
+
+class TestIncrementalRecompute:
+    @pytest.fixture(scope="class")
+    def delta_pair(self):
+        """(old layout, delta, new layout) with a symmetric insert-only
+        delta, as an undirected dynamic-graph update would produce."""
+        rng = np.random.default_rng(5)
+        g = symmetrize(rmat(8, 8, seed=3, weighted=True))
+        lay = build_layout(g, k=8, edge_tile=64, msg_tile=32)
+        d = DeltaBuffer.for_layout(lay)
+        for _ in range(6):
+            _sym_insert(d, rng, g.n, weighted=True)
+        return lay, d, apply_delta(lay, d)
+
+    def test_cc_resume_bitexact_and_cheaper(self, delta_pair):
+        lay, d, lay2 = delta_pair
+        old = connected_components(lay)
+        cold = connected_components(lay2)
+        warm = connected_components(lay2, resume_labels=old["label"],
+                                    touched=d.touched())
+        assert np.array_equal(cold["label"], warm["label"])
+        assert len(warm["stats"]) <= len(cold["stats"])
+
+    def test_cc_resume_args_must_pair(self, sym_layout):
+        with pytest.raises(ValueError):
+            connected_components(sym_layout,
+                                 resume_labels=np.zeros(4, np.uint32))
+
+    def test_bfs_resume_bitexact(self, delta_pair):
+        lay, d, lay2 = delta_pair
+        s = 0
+        old = bfs_multi(lay, [s])
+        cold = bfs_multi(lay2, [s])
+        lv = np.full((1, lay2.n_pad), -1, np.int64)
+        par = np.full((1, lay2.n_pad), -1, np.int64)
+        lv[0, :lay.n] = np.asarray(old["level"][0])
+        par[0, :lay.n] = np.asarray(old["parent"][0])
+        front = np.zeros((1, lay2.n_pad), bool)
+        front[0, :lay2.n_pad] = d.touched()
+        front[0, s] = True
+        warm = bfs_seeded_multi(lay2, [s], seed_levels=lv,
+                                seed_parents=par, frontiers=front)
+        assert np.array_equal(np.asarray(cold["level"]),
+                              np.asarray(warm["level"]))
+        assert len(warm["stats"]) <= len(cold["stats"])
+
+    def test_sssp_resume_bitexact(self, delta_pair):
+        lay, d, lay2 = delta_pair
+        s = 0
+        old = sssp_multi(lay, [s])
+        cold = sssp_multi(lay2, [s])
+        dist0 = np.full((1, lay2.n_pad), np.inf, np.float32)
+        dist0[0, :lay.n] = np.asarray(old["dist"][0], np.float32)
+        warm = sssp_multi(lay2, [s], dist0=dist0,
+                          frontier0=d.touched()[None].copy())
+        assert np.array_equal(np.asarray(cold["dist"]),
+                              np.asarray(warm["dist"]))
+        assert len(warm["stats"]) <= len(cold["stats"])
+
+    def test_pagerank_warm_restart_1e6(self, delta_pair):
+        lay, _, lay2 = delta_pair
+        ref = pagerank(lay2, iters=160)["pr"]
+        old = pagerank(lay, iters=120)["pr"]
+        warm = pagerank(lay2, iters=60, pr0=old)["pr"]
+        assert np.abs(warm - ref).max() <= 1e-6
+
+
+# ----------------------------------------------------------------------
+# epoch-tagged serving: scoped invalidation + migration
+# ----------------------------------------------------------------------
+
+def _drain(srv, app, sources, qid0=0):
+    for i, s in enumerate(sources):
+        srv.submit(GraphQuery(qid=qid0 + i, app=app,
+                              params={"source": int(s)}))
+    srv.run()
+    return {int(q.params["source"]): q.result for q in srv.done
+            if q.app == app}
+
+
+class TestEpochServing:
+    def _delta_pair(self, insert_only=True, seed=5):
+        rng = np.random.default_rng(seed)
+        g = symmetrize(rmat(8, 8, seed=3, weighted=True))
+        lay = build_layout(g, k=8, edge_tile=64, msg_tile=32)
+        d = DeltaBuffer.for_layout(lay)
+        for _ in range(4):
+            _sym_insert(d, rng, g.n, weighted=True)
+        if not insert_only:
+            # delete a real symmetric pair so the delta stays applicable
+            u = int(g.indices[0])
+            d.delete(0, u)
+            d.delete(u, 0)
+        return lay, d, apply_delta(lay, d)
+
+    def test_delta_swap_scoped_eviction_and_migration(self):
+        lay, d, lay2 = self._delta_pair(insert_only=True)
+        srv = GraphQueryServer(lay, ServeConfig(cache_size=64))
+        _drain(srv, "sssp", [5, 9])
+        old_tag = srv._layout_tag
+        assert any(k.startswith(f"res|{old_tag}|")
+                   for k in srv.cache.keys())
+        changed = {p for p, (a, b) in enumerate(zip(
+            cache_lib.partition_tags(lay), cache_lib.partition_tags(lay2)))
+            if a != b}
+        sem_clean = sem_dirty = 0
+        for k in srv.cache.keys():
+            if k.startswith(f"sem|{old_tag}|"):
+                parts = set(np.asarray(
+                    srv.cache.get(k)["parts"]).tolist())
+                if parts & changed:
+                    sem_dirty += 1
+                else:
+                    sem_clean += 1
+        srv.swap_layout(lay2, delta=d)
+        new_tag = srv._layout_tag
+        assert srv.epoch == 1 and new_tag != old_tag
+        # the old tag's namespace is fully garbage-collected
+        assert not any(f"|{old_tag}|" in k for k in srv.cache.keys())
+        # clean-partition landmarks were migrated to the new tag
+        migrated = [k for k in srv.cache.keys()
+                    if k.startswith(f"sem|{new_tag}|")]
+        assert len(migrated) == sem_clean
+        # a migrated landmark still seeds exactly: warm == cold
+        if sem_clean:
+            lms = srv.semantic.landmarks("sssp", {})
+            assert lms
+            warm = _drain(srv, "sssp", [77], qid0=50)
+            ref = sssp_multi(lay2, [77])["dist"][0]
+            fin = np.isfinite(ref)
+            assert np.array_equal(np.isinf(warm[77]["dist"]),
+                                  np.isinf(ref))
+            assert np.abs(warm[77]["dist"][fin] - ref[fin]).max() <= 1e-6
+
+    def test_deletion_delta_evicts_all_old_sem(self):
+        lay, d, lay2 = self._delta_pair(insert_only=False)
+        assert not d.insertions_only
+        srv = GraphQueryServer(lay, ServeConfig(cache_size=64))
+        _drain(srv, "sssp", [5, 9])
+        old_tag = srv._layout_tag
+        srv.swap_layout(lay2, delta=d)
+        # deletions can raise distances: nothing migrates
+        assert not any(f"|{old_tag}|" in k for k in srv.cache.keys())
+        assert srv.semantic.landmarks("sssp", {}) == []
+
+    def test_delta_swap_preserves_other_layouts(self, tmp_path):
+        """Scoped GC only touches the OLD tag: a third layout's disk
+        entries survive a delta swap between two other layouts."""
+        lay, d, lay2 = self._delta_pair()
+        other = build_layout(symmetrize(grid2d(8, 8, weighted=True,
+                                               seed=0)),
+                             k=4, edge_tile=64, msg_tile=32)
+        path = str(tmp_path / "multi")
+        srv_o = GraphQueryServer(other, ServeConfig(cache_backend=path,
+                                                    cache_size=64))
+        _drain(srv_o, "sssp", [3])
+        other_keys = set(srv_o.cache.keys())
+        srv = GraphQueryServer(lay, ServeConfig(cache_backend=path,
+                                                cache_size=64))
+        _drain(srv, "sssp", [5])
+        srv.swap_layout(lay2, delta=d)
+        assert other_keys <= set(srv.cache.keys())
+
+    def test_delta_must_match_new_layout(self, sym_layout):
+        srv = GraphQueryServer(sym_layout, ServeConfig())
+        bad = DeltaBuffer(k=sym_layout.k + 1, q=sym_layout.q,
+                          n=sym_layout.n)
+        with pytest.raises(ValueError):
+            srv.swap_layout(sym_layout, delta=bad)
+
+    def test_swap_drains_queue_on_old_epoch(self):
+        lay, d, lay2 = self._delta_pair()
+        srv = GraphQueryServer(lay, ServeConfig())
+        srv.submit(GraphQuery(qid=0, app="sssp", params={"source": 5}))
+        ref = sssp_multi(lay, [5])["dist"][0]     # OLD layout's answer
+        srv.swap_layout(lay2, delta=d)
+        assert srv.epoch == 1 and not srv.queue
+        done = {q.qid: q.result for q in srv.done}
+        fin = np.isfinite(ref)
+        assert np.array_equal(np.isinf(done[0]["dist"]), np.isinf(ref))
+        assert np.abs(done[0]["dist"][fin] - ref[fin]).max() <= 1e-6
+
+    def test_epoch_swap_event(self):
+        lay, d, lay2 = self._delta_pair()
+        with obs.override_enabled(True):
+            obs.reset()
+            srv = GraphQueryServer(lay, ServeConfig())
+            _drain(srv, "sssp", [5])
+            srv.swap_layout(lay2, delta=d)
+            evs = obs.events("epoch_swap")
+            assert evs and obs_schema.validate_event(evs[-1]) == []
+            ev = evs[-1]
+            assert ev["epoch"] == 1 and ev["delta"] is True
+            assert ev["old"] != ev["new"]
+            assert ev["changed_parts"] > 0
+            assert ev["evicted"] + ev["migrated"] > 0
+            srv.swap_layout(lay)                  # plain swap, no delta
+            ev2 = obs.events("epoch_swap")[-1]
+            assert ev2["epoch"] == 2 and ev2["delta"] is False
+            assert ev2["evicted"] == 0 and ev2["migrated"] == 0
+        obs.reset()
+
+    def test_delta_apply_event(self, sym_layout):
+        d = DeltaBuffer.for_layout(sym_layout).insert(0, 1, 1.0)
+        with obs.override_enabled(True):
+            obs.reset()
+            apply_delta(sym_layout, d)
+            evs = obs.events("delta_apply")
+            assert evs and obs_schema.validate_event(evs[-1]) == []
+            assert evs[-1]["inserts"] == 1 and evs[-1]["deletes"] == 0
+            assert 0 < evs[-1]["dirty_parts"] <= sym_layout.k
+        obs.reset()
+
+    def test_close_the_loop_end_to_end(self, tmp_path):
+        """The full dynamic-graph serving story: serve on epoch 0, apply
+        a delta, swap with scoped invalidation, and verify epoch 1 serves
+        exact answers on the NEW graph (migrated landmarks included)."""
+        lay, d, lay2 = self._delta_pair()
+        srv = GraphQueryServer(
+            lay, ServeConfig(cache_backend=str(tmp_path / "e2e"),
+                             cache_size=64))
+        _drain(srv, "sssp", [5, 9])
+        srv.swap_layout(lay2, delta=d)
+        got = _drain(srv, "sssp", [5], qid0=40)
+        ref = sssp_multi(lay2, [5])["dist"][0]    # cold truth, new graph
+        fin = np.isfinite(ref)
+        assert np.array_equal(np.isinf(got[5]["dist"]), np.isinf(ref))
+        assert np.abs(got[5]["dist"][fin] - ref[fin]).max() <= 1e-6
+
+
+# ----------------------------------------------------------------------
+# symmetrize edge cases (satellite: d(u,v) == d(v,u) bit-exact)
+# ----------------------------------------------------------------------
+
+class TestSymmetrizeEdgeCases:
+    def _pairs(self, g):
+        src = np.repeat(np.arange(g.n, dtype=np.int64), g.out_degrees())
+        w = g.weights if g.weights is not None else np.ones(g.m)
+        return {(int(s), int(t)): float(x)
+                for s, t, x in zip(src, g.indices, w)}
+
+    def test_self_loop_with_weight_emitted_once(self):
+        g = from_edges([2, 2, 0], [2, 2, 1], n=3,
+                       weights=np.asarray([5.0, 3.0, 1.0], np.float32))
+        gs = symmetrize(g)
+        p = self._pairs(gs)
+        assert p[(2, 2)] == 3.0                   # min of the duplicates
+        assert p[(0, 1)] == 1.0 and p[(1, 0)] == 1.0
+        assert gs.m == 3
+
+    def test_antiparallel_unequal_weights_take_min(self):
+        g = from_edges([0, 1], [1, 0], n=2,
+                       weights=np.asarray([3.0, 1.0], np.float32))
+        p = self._pairs(symmetrize(g))
+        assert p == {(0, 1): 1.0, (1, 0): 1.0}
+
+    def test_parallel_duplicates_deduplicated(self):
+        g = from_edges([0, 0, 0], [1, 1, 1], n=2,
+                       weights=np.asarray([4.0, 2.0, 8.0], np.float32))
+        p = self._pairs(symmetrize(g))
+        assert p == {(0, 1): 2.0, (1, 0): 2.0}
+
+    def test_unweighted_duplicates_and_loops(self):
+        g = from_edges([0, 0, 1, 2], [1, 1, 0, 2], n=3)
+        gs = symmetrize(g)
+        assert gs.weights is None
+        assert set(self._pairs(gs)) == {(0, 1), (1, 0), (2, 2)}
+
+    def test_empty_and_edgeless_graphs(self):
+        ge = symmetrize(from_edges([], [], n=0))
+        assert ge.n == 0 and ge.m == 0
+        gn = symmetrize(from_edges([], [], n=5))
+        assert gn.n == 5 and gn.m == 0
+
+    def test_symmetric_distances_bitexact_post_layout(self):
+        """d(u,v) == d(v,u) BIT-exact after symmetrize + build_layout:
+        weights in eighths make every f32 path sum exact, so any
+        asymmetry would be a real graph bug, not float noise."""
+        rng = np.random.default_rng(0)
+        m = 60
+        src = rng.integers(0, 24, m)
+        dst = rng.integers(0, 24, m)
+        w = (rng.integers(1, 17, m) / 8.0).astype(np.float32)
+        gs = symmetrize(from_edges(src, dst, n=24, weights=w))
+        lay = build_layout(gs, k=4, edge_tile=16, msg_tile=8)
+        sources = list(range(0, 24, 3))
+        dist = np.asarray(sssp_multi(lay, sources)["dist"])
+        for i, u in enumerate(sources):
+            for j, v in enumerate(sources):
+                assert dist[i][v] == dist[j][u], (u, v)

@@ -411,8 +411,9 @@ class TestServeTelemetry:
         assert swaps and obs_schema.validate_event(swaps[-1]) == []
         assert swaps[-1]["old"] == old_tag
         assert swaps[-1]["new"] == srv._layout_tag
-        # old layout's series were reset; the swap cleared the result
-        # cache, so the repeated query is a miss under the NEW tag only
+        # old layout's series were reset; a plain swap evicts nothing,
+        # but the old entry is invisible under the NEW tag, so the
+        # repeated query is a miss under the new tag only
         assert reg.counter("serve.cache_misses", layout=old_tag,
                            app="bfs").value == 0
         srv.submit(GraphQuery(qid=1, app="bfs", params={"source": 0}))

@@ -114,6 +114,78 @@ class TestBackendProtocol:
         inst = MemoryLRU(2)
         assert make_backend(inst, 99) is inst
 
+    def test_evict_prefix_default_and_helper(self, tmp_path):
+        for b in backends(tmp_path):
+            b.put("res|A|x", {"v": np.zeros(1)})
+            b.put("res|A|y", {"v": np.zeros(1)})
+            b.put("res|B|x", {"v": np.zeros(1)})
+            b.put("sem|A|x", {"v": np.zeros(1)})
+            assert cache_lib.evict_prefix(b, "res|A|") == 2
+            assert sorted(b.keys()) == ["res|B|x", "sem|A|x"]
+            assert cache_lib.evict_prefix(b, "res|A|") == 0
+
+
+class TestDiskCacheCompaction:
+    """A churned DiskCache directory must not grow without bound: the
+    append-only index.jsonl is compacted on open once the op count dwarfs
+    the live entries, and orphaned .npz payloads are unlinked."""
+
+    def _churn(self, path, rounds=20):
+        b = DiskCache(path, capacity=2)
+        for i in range(rounds):
+            b.put(f"k{i}", {"i": np.asarray([i])})
+        return b
+
+    def test_index_compacts_on_open(self, tmp_path):
+        import os
+        path = str(tmp_path / "churn")
+        self._churn(path)                       # 20 puts through cap 2
+        idx = os.path.join(path, "index.jsonl")
+        with open(idx) as fh:
+            assert sum(1 for _ in fh) > 2 * DiskCache.COMPACT_MIN_OPS
+        b2 = DiskCache(path, capacity=2)        # compacts on open
+        with open(idx) as fh:
+            assert sum(1 for _ in fh) == 2
+        assert b2.keys() == ["k18", "k19"]
+        assert np.array_equal(b2.get("k19")["i"], [19])
+
+    def test_orphaned_payloads_unlinked(self, tmp_path):
+        import os
+        path = str(tmp_path / "orphans")
+        self._churn(path)
+        # plant an orphan payload no index record points at
+        orphan = os.path.join(path, "deadbeefdeadbeefdead.npz")
+        with open(orphan, "wb") as fh:
+            fh.write(b"junk")
+        b2 = DiskCache(path, capacity=2)
+        assert not os.path.exists(orphan)
+        # exactly one payload per live entry remains
+        npz = [f for f in os.listdir(path) if f.endswith(".npz")]
+        assert len(npz) == len(b2) == 2
+
+    def test_small_logs_left_alone_and_reopen_idempotent(self, tmp_path):
+        import os
+        path = str(tmp_path / "small")
+        b = DiskCache(path, capacity=8)
+        b.put("a", {"v": np.zeros(1)})
+        b.put("b", {"v": np.zeros(1)})
+        idx = os.path.join(path, "index.jsonl")
+        with open(idx) as fh:
+            before = fh.read()
+        DiskCache(path, capacity=8)             # 2 ops: below threshold
+        with open(idx) as fh:
+            assert fh.read() == before
+        # compaction is idempotent: a second open after churn is a no-op
+        path2 = str(tmp_path / "twice")
+        self._churn(path2)
+        DiskCache(path2, capacity=2)
+        idx2 = os.path.join(path2, "index.jsonl")
+        with open(idx2) as fh:
+            once = fh.read()
+        DiskCache(path2, capacity=2)
+        with open(idx2) as fh:
+            assert fh.read() == once
+
 
 # ----------------------------------------------------------------------
 # key space
@@ -328,14 +400,22 @@ class TestServerSemantics:
         assert srv.semantic.landmarks("sssp", {}) == []
         assert srv.semantic_hits == srv.semantic_misses == 0
 
-    def test_invalidation_on_swap_layout(self, sym_layout, grid_layout):
+    def test_plain_swap_is_scoped_not_wholesale(self, sym_layout,
+                                                grid_layout):
+        """A plain ``swap_layout`` evicts NOTHING: entries are keyed by
+        content tag, so the old layout's entries become invisible under
+        the new tag rather than being destroyed."""
         srv = GraphQueryServer(sym_layout, ServeConfig())
         self._drain(srv, "sssp", [5, 9])
         assert srv.semantic.landmarks("sssp", {})
+        n_before = len(srv.cache)
+        assert n_before > 0
         srv.swap_layout(grid_layout)
-        assert len(srv.cache) == 0
+        assert srv.epoch == 1
+        assert len(srv.cache) == n_before          # nothing evicted
+        # ...but warm state never crosses layouts: the new tag's
+        # namespace is empty and fresh queries run cold+exact
         assert srv.semantic.landmarks("sssp", {}) == []
-        # warm state never crosses layouts: fresh queries run cold+exact
         warm = self._drain(srv, "sssp", [17], qid0=50)
         ref = sssp(grid_layout, 17)
         fin = np.isfinite(ref["dist"])
@@ -343,6 +423,33 @@ class TestServerSemantics:
                               np.isinf(ref["dist"]))
         assert np.abs(warm[17]["dist"][fin] - ref["dist"][fin]).max() \
             <= 1e-6
+
+    def test_swap_back_retains_disk_entries(self, sym_layout, grid_layout,
+                                            tmp_path):
+        """Regression for the wholesale-clear bug: swap A -> B -> A on a
+        DiskCache must retain A's entries and serve a semantic hit after
+        the swap back (PR 8 keys entries by content tag precisely so
+        they survive this)."""
+        cfg = ServeConfig(cache_backend=str(tmp_path / "abab"),
+                          cache_size=64)
+        srv = GraphQueryServer(sym_layout, cfg)
+        self._drain(srv, "sssp", [5, 9])
+        tag_a = srv._layout_tag
+        a_keys = {k for k in srv.cache.keys() if f"|{tag_a}|" in k}
+        assert a_keys and srv.semantic.landmarks("sssp", {})
+        srv.swap_layout(grid_layout)                # A -> B
+        srv.swap_layout(sym_layout)                 # B -> A
+        assert srv.epoch == 2 and srv._layout_tag == tag_a
+        assert a_keys <= set(srv.cache.keys())      # survived both swaps
+        # landmark state is live again under A's tag...
+        assert srv.semantic.landmarks("sssp", {})
+        # ...and actually serves: exact-result hit on a repeat query and
+        # a semantic (landmark-seeded) path for a brand-new source
+        h0 = srv.cache_hits
+        self._drain(srv, "sssp", [5], qid0=80)
+        assert srv.cache_hits == h0 + 1
+        self._drain(srv, "sssp", [77], qid0=90)   # reachable from lm 5
+        assert srv.semantic_hits > 0
 
     def test_invalidation_on_clear_cache(self, sym_layout):
         srv = GraphQueryServer(sym_layout, ServeConfig())
@@ -373,6 +480,31 @@ class TestServerSemantics:
         key = cache_lib.result_key(srv._layout_tag, "sssp",
                                    {"source": 123})
         assert srv.cache.get(key) is not None
+
+    def test_warmer_not_starved_under_sustained_load(self, sym_layout):
+        """The warmer gets its budget every ``step()``, not only when the
+        queue drains: with a saturated queue (one query per step, queue
+        never empty) a hot source must still be promoted within a few
+        steps of crossing the threshold."""
+        srv = GraphQueryServer(
+            sym_layout, ServeConfig(capture_landmarks=False, max_batch=1,
+                                    warm_threshold=2, warm_budget=4))
+        hot = 123
+        # two hits on `hot` first, then enough filler to keep the queue
+        # non-empty for many steps
+        sources = [hot, hot] + [10 + i for i in range(8)]
+        for i, s in enumerate(sources):
+            srv.submit(GraphQuery(qid=i, app="sssp",
+                                  params={"source": int(s)}))
+        steps = 0
+        while srv.semantic.landmarks("sssp", {}) != [hot]:
+            assert srv.queue, "queue drained before the warmer fired"
+            assert srv.step() > 0
+            steps += 1
+            assert steps <= 4, "warmer starved under sustained load"
+        assert srv.queue                 # load is still pending: no idle
+        srv.run()                        # drain the rest; results stay ok
+        assert hot in {int(q.params["source"]) for q in srv.done}
 
     def test_disk_backed_server_cache(self, sym_layout, tmp_path):
         path = str(tmp_path / "srvcache")
