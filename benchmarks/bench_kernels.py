@@ -6,9 +6,11 @@
 
 Times one compiled call of each of ``gather`` (segment_combine), ``scatter``
 (dc_gather), ``spmv`` (spmv_block), ``fold`` (fold_block — the blocked
-segmented fold behind the distributed gather) and ``fold2`` (fold_two_level
+segmented fold behind the distributed gather), ``fold2`` (fold_two_level
 — the same fold on an over-cap segment count, where the two-level bucketed
-kernel runs) for every backend the registry can lower on this platform,
+kernel runs) and ``fused`` (fused_step — the single-launch fused DC step
+that replaces scatter→gather→fold) for every backend the registry can
+lower on this platform,
 across rmat graph scales, and writes the results to ``BENCH_kernels.json``
 at the repo root — the perf-trajectory artifact every hot-path PR
 regenerates.  ``--smoke`` (used by CI) runs two small
@@ -32,7 +34,7 @@ from repro.graph import build_layout, rmat
 from .common import write_telemetry
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
-KERNELS = ("gather", "scatter", "spmv", "fold", "fold2")
+KERNELS = ("gather", "scatter", "spmv", "fold", "fold2", "fused")
 
 
 def bench_backend(layout, backend_name: str, platform: str, reps: int):
@@ -42,10 +44,12 @@ def bench_backend(layout, backend_name: str, platform: str, reps: int):
     for kernel in KERNELS:
         monoid = "add"
         # fold2 is the registry 'fold' kernel timed in the over-cap
-        # (two-level) regime, not a separate registry entry
-        resolved = registry.resolve(
-            "fold" if kernel.startswith("fold") else kernel, monoid,
-            platform=platform, choice=backend_name)
+        # (two-level) regime, not a separate registry entry; 'fused'
+        # is registry kernel 'fused_dc'
+        reg_kernel = ("fused_dc" if kernel == "fused"
+                      else "fold" if kernel.startswith("fold") else kernel)
+        resolved = registry.resolve(reg_kernel, monoid,
+                                    platform=platform, choice=backend_name)
         if resolved.name != backend_name:
             continue                 # would silently time the fallback
         t = tuning.time_layout(layout, backend_name, platform,

@@ -48,6 +48,15 @@ def connected_components(layout, mode: str = "hybrid",
     if resume_labels is not None:
         label = np.arange(n_pad, dtype=np.uint32)   # pads keep their ids
         label[:layout.n] = np.asarray(resume_labels, np.uint32)[:layout.n]
+        from ..graph.delta import DeltaBuffer
+        if isinstance(touched, DeltaBuffer):
+            if touched.num_deletes:
+                raise ValueError(
+                    "connected_components(resume_labels=) is exact only "
+                    "for insertion-only deltas; deletions can split "
+                    "components (labels would need to rise) — run cold "
+                    "on the new layout instead")
+            touched = touched.touched()
         t = np.asarray(touched, bool).reshape(-1)    # [n] or [n_pad]
         frontier = np.zeros(n_pad, bool)
         frontier[:min(t.size, n_pad)] = t[:n_pad]

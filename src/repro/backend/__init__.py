@@ -79,6 +79,47 @@ to ``ref`` at any segment count — ``REPRO_KERNEL_BACKEND=ref`` is the
 only way to get the ``jax.ops`` fold.  ``autotune()`` sweeps ``fold_q``
 jointly with ``fold_tile`` via the over-cap ``fold2`` timing row.
 
+The DC step: composed vs fused dataflow
+---------------------------------------
+
+The engines' DC stream has two lowerings.  The *composed* path is the
+paper's literal pipeline: the ``scatter`` kernel writes the dense
+``[NM]`` bin buffer (values only, the pre-written dc_bin), a slot
+gather re-reads it into an ``[NE]`` per-edge value stream, and the
+gather-side fold collapses that into the per-partition accumulators —
+two HBM round-trips per superstep for data that is only ever consumed
+once.  The *fused* path is registry kernel ``fused_dc``
+(:mod:`repro.kernels.fused_step`): one Pallas launch whose grid walks
+``(segment buckets × edge tiles)``, gathers each edge's source value
+straight from the VMEM-resident message table, applies the optional
+edge function, and folds into the two-level ``[fold_q]``
+sub-accumulators — neither intermediate ever materializes, and the
+input-block pipeline double-buffers edge-tile fetches against the
+combine.  Its stream contract mirrors the fold's::
+
+    acc, touched = fused(table, table_valid, idx, edge_valid, dst,
+                         num_segments[, w=, apply_weight=])
+
+with an edge contributing iff ``table_valid[idx] & edge_valid`` — the
+same elementwise condition the composed path computes via the scatter
+flags, so the two lowerings are bit-exact against each other (enforced
+by ``tests/test_fused_property.py`` through the shared differential
+harness).
+
+Selection rule: the engines take the fused kernel from
+:func:`make_kernels` / ``fused_dc`` resolution when (a) ``REPRO_FUSED``
+is not ``0`` and (b) the *selected* backend itself lowers the
+``(monoid, dtype)`` combination — {add,min,max} × 4-byte f/i/u for the
+Pallas backends, everything for ``ref``.  Unlike the other kernels
+there is deliberately NO per-call ``ref`` fallback: a missing fused
+lowering silently keeps the engine on its composed path (same backend),
+which also remains the lowering for the SC and hybrid-SC streams, for
+``pallas-native`` requests off-TPU, and for monoids outside the Pallas
+set.  ``autotune()`` observes the fused grid's ``edge_tile × fold_q``
+cross-product through the ``fused`` timing row, and the winners ride
+the same cached :class:`~repro.backend.tuning.TileGeometry` the
+layouts are built from.
+
 Telemetry
 ---------
 

@@ -2,7 +2,8 @@
 
 Every kernel call in the repo is constructed through :func:`make_kernels` /
 :func:`resolve`: the engine asks for a kernel by name (``gather`` /
-``scatter`` / ``spmv`` / ``fold``) together with its monoid and dtype, and
+``scatter`` / ``spmv`` / ``fold`` / ``fused_dc``) together with its monoid
+and dtype, and
 the registry hands back the implementation that is actually lowerable on
 the current platform — ``ref`` (pure jnp), ``pallas-interpret`` (Pallas
 bodies under the interpreter, any host), or ``pallas-native`` (Mosaic,
@@ -26,6 +27,14 @@ the one kernel whose *platform default* is Pallas everywhere:
 distributed gather runs the paper's blocked VMEM fold at every segment
 count — never ``jax.ops`` scatter-adds — unless
 ``REPRO_KERNEL_BACKEND=ref`` explicitly opts out.
+
+Kernel ``fused_dc`` (the fused scatter→fold DC step,
+:mod:`repro.kernels.fused_step`) is selection-special the other way:
+:func:`make_kernels` constructs it only when the *selected* backend
+itself lowers the ``(monoid, dtype)`` combination — no per-call ``ref``
+fallback — because the engines' fallback for a missing fused kernel is
+their own composed scatter→fold path, not a different backend.
+``REPRO_FUSED=0`` opts the engines out of selecting it at all.
 """
 from __future__ import annotations
 
@@ -40,7 +49,7 @@ import jax.numpy as jnp
 from ..kernels import ops as kops
 
 ENV_VAR = "REPRO_KERNEL_BACKEND"
-KERNELS = ("gather", "scatter", "spmv", "fold")
+KERNELS = ("gather", "scatter", "spmv", "fold", "fused_dc")
 PALLAS_MONOIDS = ("add", "min", "max")
 
 
@@ -69,6 +78,10 @@ class KernelBackend(Protocol):
 
     def segment_fold(self, monoid, tile=None, q=None) -> Any: ...
 
+    def fused_dc(self, layout, monoid) -> Any: ...
+
+    def fused_stream(self, monoid, tile=None, q=None) -> Any: ...
+
 
 class RefBackend:
     """Pure-jnp backend: supports every monoid the Monoid type can fold."""
@@ -93,6 +106,12 @@ class RefBackend:
     def segment_fold(self, monoid, tile=None, q=None):
         return kops.RefFold(_monoid_obj(monoid))
 
+    def fused_dc(self, layout, monoid):
+        return kops.RefFusedDC(layout, _monoid_obj(monoid))
+
+    def fused_stream(self, monoid, tile=None, q=None):
+        return kops.RefFusedStream(_monoid_obj(monoid))
+
 
 class PallasBackend:
     """Pallas kernel bodies, interpreted (any host) or Mosaic (TPU)."""
@@ -107,7 +126,7 @@ class PallasBackend:
         dt = jnp.dtype(dtype)
         if kernel == "spmv":
             return monoid == "add" and dt == jnp.float32
-        if kernel not in ("gather", "scatter", "fold"):
+        if kernel not in ("gather", "scatter", "fold", "fused_dc"):
             return False
         return monoid in PALLAS_MONOIDS and dt.kind in "fiu" \
             and dt.itemsize == 4
@@ -130,6 +149,17 @@ class PallasBackend:
         mono = _monoid_obj(monoid)
         return kops.FoldKernel(mono.name, mono.dtype,
                                interpret=self.interpret, tile=tile, q=q)
+
+    def fused_dc(self, layout, monoid):
+        mono = _monoid_obj(monoid)
+        return kops.FusedDCKernel(layout, mono.name, mono.dtype,
+                                  interpret=self.interpret)
+
+    def fused_stream(self, monoid, tile=None, q=None):
+        mono = _monoid_obj(monoid)
+        return kops.FusedStreamKernel(mono.name, mono.dtype,
+                                      interpret=self.interpret,
+                                      tile=tile, q=q)
 
 
 BACKENDS: dict[str, KernelBackend] = {
@@ -233,6 +263,7 @@ class KernelSet:
     fold: Any
     spmv: Any
     names: dict                  # kernel -> backend name actually used
+    fused: Any = None            # fused DC step, None -> composed path
 
     @property
     def any_pallas(self) -> bool:
@@ -260,9 +291,24 @@ def make_kernels(layout, monoid, backend=None, platform=None,
     fold = fb.segment_fold(mono,
                            tile=getattr(layout, "fold_tile", None),
                            q=getattr(layout, "fold_q", None))
+    # fused DC step: constructed only when the *selected* backend itself
+    # lowers it — deliberately no per-call ref fallback here, because the
+    # engines' fallback for a missing fused kernel is the composed
+    # scatter→fold path (same backend), not a different backend
+    fused = None
+    platform_r = platform or jax.default_backend()
+    if backend is None:
+        xb = BACKENDS[default_backend_name(platform_r, "fused_dc")]
+    elif isinstance(backend, str):
+        xb = BACKENDS[backend]
+    else:
+        xb = backend
+    if xb.supports(platform_r, "fused_dc", mono.name, mono.dtype):
+        fused = _tag_scope(xb.fused_dc(layout, mono), "fused_dc", xb.name)
+        names["fused_dc"] = xb.name
     return KernelSet(gather=_tag_scope(gb.gather(layout, mono),
                                        "gather", gb.name),
                      scatter=_tag_scope(sb.scatter(layout, mono),
                                         "scatter", sb.name),
                      fold=_tag_scope(fold, "fold", fb.name),
-                     spmv=spmv, names=names)
+                     spmv=spmv, names=names, fused=fused)

@@ -25,7 +25,12 @@ jointly with ``fold_tile``: the two-level one-hot block is
 ``[fold_tile, fold_q]``, so the same Eq. 1 trade (block size vs number of
 grid revisits) couples the two knobs.  The ``fold2`` kernel row times the
 two-level path on an over-cap synthetic stream so the sweep can actually
-observe ``fold_q`` (below the cap the registry fold never runs it).
+observe ``fold_q`` (below the cap the registry fold never runs it), and
+the ``fused`` row times the fused scatter→fold DC step
+(:mod:`repro.kernels.fused_step`) on the layout's real edge stream —
+its grid is ``(segments/fold_q, edges/edge_tile)``, so that row sweeps
+the ``edge_tile × fold_q`` cross-product directly; winners land in the
+same cached geometry :func:`repro.graph.layout.build_layout` consults.
 
 Cache entries are keyed by (platform, backend, log2-bucketed graph size,
 partition count): geometry is a property of the memory hierarchy and the
@@ -143,16 +148,21 @@ def _timed(fn, reps: int) -> float:
 
 
 def time_layout(layout, backend_name: str, platform: str,
-                kernels=("gather", "scatter", "spmv", "fold", "fold2"),
+                kernels=("gather", "scatter", "spmv", "fold", "fold2",
+                         "fused"),
                 reps: int = 3,
                 monoid: str = "add", fold_backend=None) -> dict:
     """Time one compiled call of each kernel on a built layout.
 
-    ``fold_backend`` overrides the backend for the fold row only: the
-    autotuner passes the *per-kernel* platform default there, because the
-    fold's default backend (Pallas everywhere) differs from the other
-    kernels' and ``RefFold`` ignores ``fold_tile`` — sweeping it through
-    ref would select the winner by timing jitter."""
+    ``fold_backend`` overrides the backend for the fold *and fused* rows
+    only: the autotuner passes the *per-kernel* platform default there,
+    because the fold's default backend (Pallas everywhere) differs from
+    the other kernels' and ``RefFold``/``RefFusedDC`` ignore the tile
+    knobs — sweeping them through ref would select the winner by timing
+    jitter.  The ``fused`` row times the fused scatter→fold DC step on
+    the layout's real edge stream, so the sweep observes the
+    ``edge_tile × fold_q`` cross-product the fused kernel's grid is
+    built from."""
     rng = np.random.default_rng(0)
     out = {}
     dtype = jnp.float32
@@ -208,12 +218,26 @@ def time_layout(layout, backend_name: str, platform: str,
         _time_fold("fold2", ns2,
                    np.sort(rng.integers(0, ns2 - 1, layout.num_edges))
                    .astype(np.int32))
+    if "fused" in kernels:
+        # the fused DC step over the layout's real edge stream: its grid
+        # is (segments/fold_q, edges/edge_tile), so this row is the one
+        # place the sweep observes the edge_tile × fold_q cross-product
+        b = registry.resolve("fused_dc", monoid, dtype=dtype,
+                             platform=platform,
+                             choice=fold_backend or backend_name)
+        fk = jax.jit(b.fused_dc(layout, monoid).__call__)
+        table = jnp.asarray(
+            rng.integers(0, 64, layout.n_pad + 1).astype(np.float32))
+        tvalid = jnp.ones((layout.n_pad + 1,), jnp.bool_) \
+            .at[-1].set(False)
+        out["fused"] = _timed(lambda: fk(table, tvalid), reps)
     return out
 
 
 def autotune(g, k: Optional[int] = None, backend=None,
              platform: Optional[str] = None,
-             kernels=("gather", "scatter", "spmv", "fold", "fold2"),
+             kernels=("gather", "scatter", "spmv", "fold", "fold2",
+                      "fused"),
              reps: int = 3,
              cache_dir=None, force: bool = False) -> TileGeometry:
     """Sweep candidate tile geometries for graph ``g``; cache the winner.

@@ -230,6 +230,17 @@ class Engine:
         # layout's tuned fold_tile/fold_q; budgets are static per
         # compiled step, so the stream shape is known at trace time)
         self._fold = kset.fold
+        # fused DC step (registry kernel 'fused_dc'): one Pallas call
+        # replacing scatter -> slot gather -> gather fold, selected when
+        # the backend provides it and REPRO_FUSED != 0; otherwise the
+        # composed path below runs (silently — that *is* the fallback)
+        from ..kernels.fused_step import fused_enabled
+        self._fused = kset.fused if fused_enabled() else None
+        if self._fused is not None:
+            self._fused.apply_weight = (
+                program.apply_weight
+                if (program.apply_weight is not None
+                    and self.edge_w is not None) else None)
         self._step_cache = {}                      # (bv, be) -> jitted step
 
     # ------------------------------------------------------------------
@@ -266,24 +277,35 @@ class Engine:
 
             # ---- DC stream (paper Alg. 2: values-only messages over the
             # pre-written dc_bin adjacency) ----
-            msg_data = self._scatter_kernel(
-                msgs, active & dc_mask[self.vert_part])
-            dc_valid = (active_p[self.png_src]
-                        & dc_mask[self.png_part])             # [NM]
-            msg_data_p = jnp.concatenate(
-                [msg_data, mono.identity_array((1,))])
-            dc_valid_p = jnp.concatenate(
-                [dc_valid, jnp.zeros((1,), jnp.bool_)])
-            edge_vals = msg_data_p[self.msg_slot]             # [NE]
-            edge_valid = dc_valid_p[self.msg_slot]
-            if prog.apply_weight is not None and self.edge_w is not None:
-                edge_vals = prog.apply_weight(edge_vals, self.edge_w)
-                edge_vals = jnp.where(edge_valid, edge_vals, ident)
-            acc, touched = self._gather_kernel(
-                edge_vals, edge_valid, dc_mask.astype(jnp.int32))
-            acc = jnp.concatenate([acc, mono.identity_array((1,))])
-            touched = jnp.concatenate(
-                [touched, jnp.zeros((1,), jnp.bool_)])
+            if self._fused is not None:
+                # fused lowering: the kernel gathers each edge's source
+                # value from msgs_p itself and folds it straight into the
+                # two-level sub-accumulators — the [NM] bin buffer and
+                # the [NE] edge-value stream never materialize
+                table_valid = jnp.concatenate(
+                    [active & dc_mask[self.vert_part],
+                     jnp.zeros((1,), jnp.bool_)])
+                acc, touched = self._fused(msgs_p, table_valid)
+            else:
+                msg_data = self._scatter_kernel(
+                    msgs, active & dc_mask[self.vert_part])
+                dc_valid = (active_p[self.png_src]
+                            & dc_mask[self.png_part])         # [NM]
+                msg_data_p = jnp.concatenate(
+                    [msg_data, mono.identity_array((1,))])
+                dc_valid_p = jnp.concatenate(
+                    [dc_valid, jnp.zeros((1,), jnp.bool_)])
+                edge_vals = msg_data_p[self.msg_slot]         # [NE]
+                edge_valid = dc_valid_p[self.msg_slot]
+                if (prog.apply_weight is not None
+                        and self.edge_w is not None):
+                    edge_vals = prog.apply_weight(edge_vals, self.edge_w)
+                    edge_vals = jnp.where(edge_valid, edge_vals, ident)
+                acc, touched = self._gather_kernel(
+                    edge_vals, edge_valid, dc_mask.astype(jnp.int32))
+                acc = jnp.concatenate([acc, mono.identity_array((1,))])
+                touched = jnp.concatenate(
+                    [touched, jnp.zeros((1,), jnp.bool_)])
 
             # ---- SC stream (static budgets; absent when be == 0) ----
             if be > 0:
@@ -362,7 +384,33 @@ class Engine:
                                  "not both")
             if touched is None:
                 raise ValueError("resume_from= needs touched= (the "
-                                 "delta-touched initial frontier)")
+                                 "delta-touched initial frontier, or the "
+                                 "DeltaBuffer itself)")
+            # `touched` may be the DeltaBuffer itself (preferred: the
+            # boolean mask cannot carry the insert/delete distinction the
+            # exactness contract depends on).  Deletion deltas must NOT
+            # quietly recompute from the old fixpoint: monotone
+            # relaxation can only lower values, so the resumed run would
+            # CONVERGE — to a wrong (stale-upper-bound) answer.
+            from ..graph.delta import DeltaBuffer
+            if isinstance(touched, DeltaBuffer):
+                if touched.num_deletes:
+                    raise ValueError(
+                        "resume_from= is exact only for insertion-only "
+                        f"deltas; this delta removes {touched.num_deletes}"
+                        " edge(s) and deleted edges may require values to "
+                        "rise, which monotone relaxation cannot do — run "
+                        "cold (state=/frontier=) on the new layout "
+                        "instead")
+                touched = touched.touched()
+            if self.program.monoid.name not in ("min", "max", "or",
+                                                "min_with_payload"):
+                raise ValueError(
+                    "resume_from= requires an idempotent monoid (min/max/"
+                    f"or): re-folding under {self.program.monoid.name!r} "
+                    "double-counts contributions already absorbed into "
+                    "the old fixpoint — PageRank-style programs resume "
+                    "via the residual path (pagerank(pr0=)) instead")
             state, frontier = resume_from, touched
         if state is None or frontier is None:
             raise ValueError("run() needs state+frontier (or "

@@ -149,10 +149,42 @@ def _resolve_fold(program: VertexProgram, backend=None, tile=None, q=None):
     return kregistry._tag_scope(fold, "fold", b.name), b.name
 
 
+def _resolve_fused(program: VertexProgram, backend=None, tile=None, q=None):
+    """Shard-local fused gather→fold (registry kernel ``fused_dc``), or
+    ``(None, None)`` when the composed slot-gather + fold path should run.
+
+    Mirrors :func:`_resolve_fold`'s selection (explicit ``backend=``, the
+    ``REPRO_KERNEL_BACKEND`` env, platform default) but with the fused
+    kernel's fallback rule: no per-call ``ref`` substitution — when
+    ``REPRO_FUSED=0`` or the selected backend does not lower the
+    ``(monoid, dtype)`` combination, the DC gather silently stays on the
+    composed path (which also remains the SC/hybrid lowering)."""
+    from ..kernels.fused_step import fused_enabled
+    if not fused_enabled():
+        return None, None
+    mono = program.monoid
+    platform = jax.default_backend()
+    if backend is None:
+        b = kregistry.BACKENDS[
+            kregistry.default_backend_name(platform, "fused_dc")]
+    elif isinstance(backend, str):
+        if backend not in kregistry.BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; choose one of "
+                f"{kregistry.available_backends()}")
+        b = kregistry.BACKENDS[backend]
+    else:
+        b = backend
+    if not b.supports(platform, "fused_dc", mono.name, mono.dtype):
+        return None, None
+    fk = b.fused_stream(mono, tile=tile, q=q)
+    return kregistry._tag_scope(fk, "fused_dc", b.name), b.name
+
+
 def build_dc_step(program: VertexProgram, meta: dict,
                   axis_names: Sequence[str], dense_frontier: bool = False,
                   wire_bf16: bool = False, wire_bitmap: bool = False,
-                  fold=None, batched: bool = False):
+                  fold=None, fused=None, batched: bool = False):
     """Destination-centric distributed iteration (per-device body).
 
     dense_frontier: the app keeps every vertex active every iteration
@@ -168,7 +200,12 @@ def build_dc_step(program: VertexProgram, meta: dict,
     arrive as ``[B, nv]`` shards, the bin exchange moves ``[B, D, S]`` in
     ONE collective per payload, and the gather folds every lane through a
     single flattened-segment-space fold (:func:`_fold_lanes`), so each
-    scatter/all_to_all/fold launch is amortized across the whole batch."""
+    scatter/all_to_all/fold launch is amortized across the whole batch.
+    fused: a registry ``fused_dc`` stream kernel (:func:`_resolve_fused`);
+    when set, the gather side skips the ``[NEd]`` slot-gathered
+    edge-value stream entirely — the kernel gathers straight from the
+    received bin table and folds in one launch.  ``None`` keeps the
+    composed slot gather + fold."""
     mono = program.monoid
     nv, S, D = meta["nv"], meta["S"], meta["D"]
     weighted = meta["weighted"]
@@ -234,17 +271,44 @@ def build_dc_step(program: VertexProgram, meta: dict,
              jnp.full(lead + (1,), ident, wdt)], axis=-1)
 
         # ---- gather over the pre-written dc_bin ----
-        slot = A["in_msg_slot"]
-        ev = rv[..., slot].astype(mono.dtype)                 # [.., NEd]
-        evalid = rf[..., slot] & A["in_valid"]
-        if program.apply_weight is not None and weighted:
-            ev = vm(program.apply_weight, (0, None))(ev, A["in_w"])
-        ev = jnp.where(evalid, ev, mono.identity)
-        dst = jnp.where(evalid, A["in_dst_local"], nv)
-        if batched:
-            acc, touched = _fold_lanes(fold, ev, evalid, dst, nv + 1)
+        if fused is not None:
+            # fused lowering: the kernel gathers each edge's value from
+            # the received bin table itself — no [NEd] edge-value stream.
+            # The table is pre-cast off the wire dtype (the elementwise
+            # cast commutes with the gather, so parity with the composed
+            # ``rv[slot].astype`` is bit-exact)
+            table = rv.astype(mono.dtype)
+            aw = (program.apply_weight
+                  if program.apply_weight is not None and weighted
+                  else None)
+            w = A["in_w"] if aw is not None else None
+            slot, evalid_s = A["in_msg_slot"], A["in_valid"]
+            dst_s = A["in_dst_local"]
+            if batched:
+                # per-lane unroll, same rationale as _fold_lanes (the
+                # static slot/validity/dst streams are shared)
+                accs, touch = [], []
+                for i in range(table.shape[0]):
+                    a, t = fused(table[i], rf[i], slot, evalid_s, dst_s,
+                                 nv + 1, w=w, apply_weight=aw)
+                    accs.append(a)
+                    touch.append(t)
+                acc, touched = jnp.stack(accs), jnp.stack(touch)
+            else:
+                acc, touched = fused(table, rf, slot, evalid_s, dst_s,
+                                     nv + 1, w=w, apply_weight=aw)
         else:
-            acc, touched = fold(ev, evalid, dst, nv + 1)
+            slot = A["in_msg_slot"]
+            ev = rv[..., slot].astype(mono.dtype)             # [.., NEd]
+            evalid = rf[..., slot] & A["in_valid"]
+            if program.apply_weight is not None and weighted:
+                ev = vm(program.apply_weight, (0, None))(ev, A["in_w"])
+            ev = jnp.where(evalid, ev, mono.identity)
+            dst = jnp.where(evalid, A["in_dst_local"], nv)
+            if batched:
+                acc, touched = _fold_lanes(fold, ev, evalid, dst, nv + 1)
+            else:
+                acc, touched = fold(ev, evalid, dst, nv + 1)
         acc, touched = acc[..., :nv], touched[..., :nv]
 
         st3, activated = vm(program.apply_fn, (0, 0, 0, None))(
@@ -494,6 +558,9 @@ class DistEngine:
         fold, self.backend_name = _resolve_fold(
             program, backend, tile=getattr(sharded, "fold_tile", None),
             q=getattr(sharded, "fold_q", None))
+        fused, self.fused_backend_name = _resolve_fused(
+            program, backend, tile=getattr(sharded, "fold_tile", None),
+            q=getattr(sharded, "fold_q", None))
         meta = dict(nv=sharded.nv, S=sharded.S, D=sharded.D,
                     cap_in=sharded.cap_in, cap_pair=sharded.cap_pair,
                     kpd=sharded.kpd, weighted=sharded.weighted)
@@ -508,7 +575,7 @@ class DistEngine:
         self.deg = jax.device_put(jnp.asarray(deg), shard)
 
         dc_body = build_dc_step(program, meta, self.axes, fold=fold,
-                                wire_bf16=wire_bf16,
+                                fused=fused, wire_bf16=wire_bf16,
                                 wire_bitmap=wire_bitmap)
         sc_body = build_sc_step(program, meta, self.axes, fold=fold)
         hy_body = build_hybrid_step(program, meta, self.axes, fold=fold)
@@ -538,7 +605,7 @@ class DistEngine:
         # specializations _run_batched_loop asks for (<= log2(B) of them
         # thanks to the pow2 lane compaction)
         dcb_body = build_dc_step(program, meta, self.axes, fold=fold,
-                                 wire_bf16=wire_bf16,
+                                 fused=fused, wire_bf16=wire_bf16,
                                  wire_bitmap=wire_bitmap, batched=True)
         bspec = P(None, tuple(mesh.axis_names))
         self._bspec = bspec

@@ -1,0 +1,231 @@
+"""Fused scatter→fold DC step — the Gather phase without the message stream.
+
+The composed DC lowering materializes every message twice: the Scatter
+kernel writes the full ``[NM]`` bin buffer (values only, the paper's
+pre-written ``dc_bin``), the slot gather re-reads it into a ``[NE]``
+edge-value stream, and only then does the segmented fold collapse it into
+the per-partition accumulators.  Both intermediates round-trip HBM — the
+single largest remaining memory-traffic cost of the reproduction, and
+exactly the locality argument of the source paper (and of "Making Caches
+Work for Graph Analytics": partition-private accumulators should absorb
+messages while they are still hot).
+
+This kernel fuses the whole chain: per edge tile it *gathers* the source
+value straight out of the vertex-message table, applies the optional edge
+function (``apply_weight``), and folds the result directly into the
+``[fold_q]`` VMEM-resident sub-accumulators of the two-level layout
+(:mod:`repro.kernels.fold_two_level`).  No intermediate message stream
+ever hits HBM; Pallas' automatic input-block pipelining double-buffers
+the edge-tile fetches against the combine.
+
+Structure (the two-level fold, with the gather pulled inside):
+
+  * grid ``(nb, nt)``: ``nb = ceil(num_segments / fold_q)`` coarse
+    destination buckets × ``nt = ceil(NE / edge_tile)`` edge tiles;
+  * the message table (``[n_pad + 1]`` vertex values + identity sentinel)
+    rides along as a constant-index-map input block, resident across the
+    whole grid;
+  * bucket ``b``'s ``[1, fold_q]`` sub-accumulator is the revisited
+    output block (initialized at ``t == 0``, accumulated across the
+    inner sweep);
+  * per-tile bucket ranges ``[bmin, bmax]`` — computed from the
+    *structurally valid* destinations before the ``pallas_call`` —
+    predicate each grid step, so the destination-sorted dc_bin streams
+    do ~``nb + nt`` body runs, not ``nb × nt``;
+  * the combine is the same masked one-hot VPU reduction as the fold
+    kernels (the MXU one-hot matmul stays off the table for the
+    NaN/int-truncation reasons documented in
+    :mod:`repro.kernels.fold_block`).
+
+Validity is resolved *inside* the kernel: an edge contributes iff its
+static slot is real (``edge_valid``) AND its source vertex is live in the
+table (``table_valid`` — the engines pass ``active & dc_mask`` there), so
+the host never materializes a per-edge validity stream either.
+
+The in-kernel table gather (``table[idx]``) is an arbitrary dynamic
+vector gather.  Interpret mode executes it as a plain jnp gather on any
+host; Mosaic support for arbitrary VMEM gathers is generation-dependent,
+so the ``pallas-native`` registration shares the usual caveat of this
+repo's TPU path (untested here — the TPU CI lane is still an open
+ROADMAP item).
+
+Env: ``REPRO_FUSED=0`` opts the engines out of fused selection entirely
+(they silently fall back to the composed scatter→fold path, which also
+remains the path for SC/hybrid streams and unsupported backends).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fold_block import default_fold_tile
+from .fold_two_level import default_fold_q
+from .segment_combine import _identity_val
+
+ENV_FUSED = "REPRO_FUSED"
+
+
+def fused_enabled() -> bool:
+    """Engine-side opt-out: ``REPRO_FUSED=0`` disables fused DC selection
+    (the composed scatter→fold path runs instead).  Default: enabled."""
+    return os.environ.get(ENV_FUSED, "1") != "0"
+
+
+def _kernel(table_ref, tvalid_ref,                     # resident table in
+            idx_ref, evalid_ref, dst_ref, w_ref,       # VMEM in (one tile)
+            bmin_ref, bmax_ref,                        # VMEM in (per tile)
+            acc_ref, touched_ref,                      # VMEM out (resident)
+            *, monoid: str, q: int, apply_weight):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    ident = _identity_val(monoid, acc_ref.dtype)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, ident)
+        touched_ref[...] = jnp.zeros_like(touched_ref)
+
+    # bucket-range predication over the structurally valid destinations:
+    # tiles that cannot land a message in bucket b are skipped entirely
+    @pl.when((bmin_ref[0] <= b) & (b <= bmax_ref[0]))
+    def _body():
+        idx = idx_ref[...]                              # [T]
+        # the fused gather: source values pulled straight from the
+        # resident message table — no [NE] edge-value stream in HBM
+        vals = table_ref[...][idx]                      # [T]
+        valid = ((tvalid_ref[...][idx] > 0)
+                 & (evalid_ref[...] > 0))               # [T]
+        if apply_weight is not None:
+            vals = apply_weight(vals, w_ref[...]).astype(acc_ref.dtype)
+        ids = dst_ref[...]
+        bucket = ids // q
+        off = ids - bucket * q
+        cols = jax.lax.broadcasted_iota(jnp.int32, (vals.shape[0], q), 1)
+        onehot = ((off[:, None] == cols) & (bucket == b)[:, None]
+                  & valid[:, None])                     # [T, q]
+        if monoid == "add":
+            masked = jnp.where(onehot, vals[:, None],
+                               jnp.zeros((), acc_ref.dtype))
+            contrib = jnp.sum(masked, axis=0)
+            acc_ref[...] = acc_ref[...] \
+                + contrib.astype(acc_ref.dtype)[None, :]
+        elif monoid == "min":
+            masked = jnp.where(onehot, vals[:, None], ident)
+            acc_ref[...] = jnp.minimum(acc_ref[...],
+                                       jnp.min(masked, axis=0)[None, :])
+        elif monoid == "max":
+            masked = jnp.where(onehot, vals[:, None], ident)
+            acc_ref[...] = jnp.maximum(acc_ref[...],
+                                       jnp.max(masked, axis=0)[None, :])
+        touched_ref[...] = jnp.maximum(
+            touched_ref[...],
+            jnp.max(onehot.astype(jnp.int32), axis=0)[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "monoid",
+                                             "edge_tile", "fold_q",
+                                             "interpret", "apply_weight"))
+def fused_scatter_fold(table, table_valid, idx, edge_valid, dst,
+                       num_segments: int, *, monoid: str = "add",
+                       edge_tile: int = 256,
+                       fold_q: int = None,
+                       interpret: bool = True,
+                       apply_weight=None, w=None):
+    """Gather-from-table + edge function + two-level segmented fold, fused.
+
+    Contract (registry kernel ``fused_dc``):
+
+      table:       [M] source value per table slot (the engines pass the
+                   vertex message array + identity sentinel).
+      table_valid: [M] bool/int; a slot's messages contribute nothing
+                   when its source is invalid (inactive / non-DC).
+      idx:         [NE] int32 table slot per edge (clamped into range;
+                   out-of-range only ever occurs on invalid pad edges).
+      edge_valid:  [NE] bool/int static structural validity per edge.
+      dst:         [NE] int32 destination segment per edge; ids outside
+                   ``[0, num_segments)`` contribute nothing.
+      num_segments: static segment count (engines pass ``n_pad + 1`` /
+                   ``nv + 1``; the overflow bin is the last segment).
+      apply_weight: optional static edge function ``f(vals, w)`` applied
+                   to the gathered values (the composed path applies it
+                   to the same inputs elementwise, so parity is exact).
+      w:           [NE] edge weights; required iff apply_weight is set.
+    Returns:
+      acc [num_segments] monoid fold, touched [num_segments] bool —
+      an edge contributes iff ``table_valid[idx] & edge_valid``.
+    """
+    ns = int(num_segments)
+    q = int(fold_q) if fold_q else default_fold_q()
+    tile = int(edge_tile) if edge_tile else default_fold_tile()
+    ne = idx.shape[0]
+    nt = max(1, -(-ne // tile))
+    ne_pad = nt * tile
+    nb = max(1, -(-ns // q))
+    ident = _identity_val(monoid, table.dtype)
+
+    idx = jnp.clip(idx.astype(jnp.int32), 0, table.shape[0] - 1)
+    idx = jnp.pad(idx, (0, ne_pad - ne))
+    evalid = jnp.pad(edge_valid.astype(jnp.int32), (0, ne_pad - ne))
+    dst = jnp.pad(dst.astype(jnp.int32), (0, ne_pad - ne))
+    if apply_weight is not None:
+        w = jnp.pad(w, (0, ne_pad - ne))
+    else:
+        # dummy lane so the in_specs are static; never read by the body
+        w = jnp.zeros((ne_pad,), table.dtype)
+
+    # per-tile coarse-bucket ranges over the structurally valid edges: a
+    # conservative superset (the table-validity side is resolved in the
+    # kernel), exact for the frontier-independent dc_bin structure — an
+    # all-invalid tile gets the empty range [nb, -1] and is never entered
+    vb = evalid > 0
+    bt = jnp.where(vb, dst // q, -1)
+    bmax = jnp.clip(jnp.max(bt.reshape(nt, tile), axis=1), -1, nb - 1)
+    bmin = jnp.clip(
+        jnp.min(jnp.where(vb, dst // q, nb).reshape(nt, tile), axis=1),
+        0, nb)
+
+    m = table.shape[0]
+    acc, touched = pl.pallas_call(
+        functools.partial(_kernel, monoid=monoid, q=q,
+                          apply_weight=apply_weight),
+        grid=(nb, nt),
+        in_specs=[pl.BlockSpec((m,), lambda b, t: (0,)),
+                  pl.BlockSpec((m,), lambda b, t: (0,)),
+                  pl.BlockSpec((tile,), lambda b, t: (t,)),
+                  pl.BlockSpec((tile,), lambda b, t: (t,)),
+                  pl.BlockSpec((tile,), lambda b, t: (t,)),
+                  pl.BlockSpec((tile,), lambda b, t: (t,)),
+                  pl.BlockSpec((1,), lambda b, t: (t,)),
+                  pl.BlockSpec((1,), lambda b, t: (t,))],
+        out_specs=[pl.BlockSpec((1, q), lambda b, t: (b, 0)),
+                   pl.BlockSpec((1, q), lambda b, t: (b, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, q), table.dtype),
+                   jax.ShapeDtypeStruct((nb, q), jnp.int32)],
+        interpret=interpret,
+    )(table, table_valid.astype(jnp.int32), idx, evalid, dst, w,
+      bmin.astype(jnp.int32), bmax.astype(jnp.int32))
+    # buckets tile the segment space disjointly: stage 2 is a relayout
+    return (acc.reshape(-1)[:ns], touched.reshape(-1)[:ns] > 0)
+
+
+def ref_fused_scatter_fold(mono, table, table_valid, idx, edge_valid, dst,
+                           num_segments: int, apply_weight=None, w=None):
+    """Pure-jnp oracle with :func:`fused_scatter_fold`'s exact contract —
+    what the ``ref`` backend registers for kernel ``fused_dc`` (and what
+    the differential harness checks the Pallas lowering against)."""
+    ns = int(num_segments)
+    idx = jnp.clip(idx.astype(jnp.int32), 0, table.shape[0] - 1)
+    vals = table[idx].astype(mono.dtype)
+    valid = table_valid.astype(bool)[idx] & edge_valid.astype(bool)
+    if apply_weight is not None:
+        vals = apply_weight(vals, w).astype(mono.dtype)
+    vals = jnp.where(valid, vals, mono.identity)
+    ids = jnp.where(valid, dst.astype(jnp.int32), ns - 1)
+    acc = mono.segment_fold(vals, ids, ns)
+    touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
+                                  num_segments=ns) > 0
+    return acc, touched

@@ -25,6 +25,8 @@ from .dc_gather import dc_gather
 from .fold_block import (blocked_segment_fold, default_fold_tile,
                          max_fold_segments)
 from .fold_two_level import default_fold_q, two_level_segment_fold
+from .fused_step import (fused_enabled, fused_scatter_fold,
+                         ref_fused_scatter_fold)
 from .segment_combine import segment_combine, _identity_val
 from .spmv_block import spmv_block
 
@@ -278,6 +280,183 @@ class RefGather:
         return (acc[:, :self.n_pad], touched[:, :self.n_pad]), (True, True)
 
 
+def _edge_src_global(layout) -> np.ndarray:
+    """Per-edge *global* source vertex of the gather-order edge stream.
+
+    Every edge tile lies inside one ``(p', p)`` block, so the tile's
+    source partition base plus the per-edge local offset recovers the
+    global id — the static index the fused kernel gathers the message
+    table with (clamped into the sentinel for pad tiles)."""
+    base = np.repeat(layout.tile_src_part.astype(np.int64),
+                     layout.edge_tile) * layout.q
+    src = base + layout.edge_src_local.astype(np.int64)
+    return np.clip(src, 0, layout.n_pad).astype(np.int32)
+
+
+class FusedDCKernel:
+    """Fused DC scatter→fold bound to a layout (registry ``fused_dc``).
+
+    One Pallas call replaces the composed scatter kernel + slot gather +
+    gather fold of the DC stream: per edge tile the source message is
+    gathered straight from the ``[n_pad + 1]`` vertex table (identity
+    sentinel last) and folded into the two-level ``[fold_q]``
+    sub-accumulators — no ``[NM]`` bin buffer, no ``[NE]`` edge-value
+    stream (see :mod:`repro.kernels.fused_step`).
+
+    ``apply_weight`` is engine-configured (the registry does not see the
+    program): :class:`repro.core.engine.Engine` sets the attribute once,
+    before the step is traced, under the same condition the composed
+    path applies it.
+    """
+
+    def __init__(self, layout, monoid_name: str, dtype,
+                 interpret: bool = True):
+        self.L = layout
+        self.monoid = monoid_name
+        self.dtype = jnp.dtype(dtype)
+        self.interpret = interpret
+        self.n_pad = layout.n_pad
+        self.edge_tile = layout.edge_tile
+        self.fold_q = layout.fold_q
+        self.edge_src = jnp.asarray(_edge_src_global(layout))
+        self.edge_valid = jnp.asarray(layout.edge_valid.astype(np.int32))
+        self.edge_dst = jnp.asarray(layout.edge_dst)
+        self.edge_w = (jnp.asarray(layout.edge_w)
+                       if layout.edge_w is not None else None)
+        self.apply_weight = None               # engine-configured
+
+    def __call__(self, table, table_valid):
+        aw = self.apply_weight
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.fused_dc")):
+            return fused_scatter_fold(
+                table, table_valid, self.edge_src, self.edge_valid,
+                self.edge_dst, self.n_pad + 1, monoid=self.monoid,
+                edge_tile=self.edge_tile, fold_q=self.fold_q,
+                interpret=self.interpret, apply_weight=aw,
+                w=self.edge_w if aw is not None else None)
+
+
+class RefFusedDC:
+    """Pure-jnp fused DC step with FusedDCKernel's exact call contract —
+    the composed oracle collapsed to one gather + one segmented fold.
+
+    Carries the same ``custom_vmap`` rule as :class:`RefGather` (the
+    batched multi-source engine path): the table gather batches fine,
+    but the segment fold would hit XLA's catastrophic scatter batching
+    on CPU, so batched lanes fold through a flattened
+    ``lane * ns + dst`` segment space instead.
+    """
+
+    def __init__(self, layout, monoid):
+        self.monoid = monoid
+        self.n_pad = layout.n_pad
+        self.edge_src = jnp.asarray(_edge_src_global(layout))
+        self.edge_valid = jnp.asarray(layout.edge_valid)
+        self.edge_dst = jnp.asarray(layout.edge_dst)
+        self.edge_w = (jnp.asarray(layout.edge_w)
+                       if layout.edge_w is not None else None)
+        self.apply_weight = None               # engine-configured
+        call = jax.custom_batching.custom_vmap(self._single)
+        call.def_vmap(self._vmap_rule)
+        self._call = call
+
+    def __call__(self, table, table_valid):
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.fused_dc.ref")):
+            return self._call(table, table_valid)
+
+    def _single(self, table, table_valid):
+        aw = self.apply_weight
+        return ref_fused_scatter_fold(
+            self.monoid, table, table_valid, self.edge_src,
+            self.edge_valid, self.edge_dst, self.n_pad + 1,
+            apply_weight=aw, w=self.edge_w if aw is not None else None)
+
+    def _vmap_rule(self, axis_size, in_batched, table, table_valid):
+        tb, tvb = in_batched
+        if not tb:
+            table = jnp.broadcast_to(table, (axis_size,) + table.shape)
+        if not tvb:
+            table_valid = jnp.broadcast_to(
+                table_valid, (axis_size,) + table_valid.shape)
+        mono = self.monoid
+        B, ns = axis_size, self.n_pad + 1
+        vals = jnp.take(table, self.edge_src, axis=1).astype(mono.dtype)
+        valid = (jnp.take(table_valid.astype(bool), self.edge_src, axis=1)
+                 & self.edge_valid[None, :])
+        if self.apply_weight is not None:
+            vals = self.apply_weight(
+                vals, self.edge_w[None, :]).astype(mono.dtype)
+        vals = jnp.where(valid, vals, mono.identity)
+        ids = jnp.where(valid, self.edge_dst[None, :], ns - 1)
+        # flattened segment space, chunked so bc * ns fits int32 (cf.
+        # RefGather._vmap_rule — segment ops silently drop out-of-range
+        # ids and int64 is unavailable without x64)
+        lanes_per_chunk = max(1, (2**31 - 1) // ns)
+        accs, toucheds = [], []
+        for lo in range(0, B, lanes_per_chunk):
+            bc = min(lanes_per_chunk, B - lo)
+            fids = (jnp.arange(bc, dtype=jnp.int32)[:, None] * ns
+                    + ids[lo:lo + bc]).reshape(-1)
+            accs.append(mono.segment_fold(
+                vals[lo:lo + bc].reshape(-1), fids, bc * ns)
+                .reshape(bc, ns))
+            toucheds.append(jax.ops.segment_max(
+                valid[lo:lo + bc].astype(jnp.int32).reshape(-1), fids,
+                num_segments=bc * ns).reshape(bc, ns) > 0)
+        acc = jnp.concatenate(accs) if len(accs) > 1 else accs[0]
+        touched = (jnp.concatenate(toucheds) if len(toucheds) > 1
+                   else toucheds[0])
+        return (acc, touched), (True, True)
+
+
+class FusedStreamKernel:
+    """Layout-free fused gather→fold with the stream ``fused_dc`` contract.
+
+    What :class:`FoldKernel` is to the fold, this is to the fused step:
+    the distributed engine's gather side has no tile/partition structure
+    on the receive table (``rv[slot]``), so the kernel takes the table,
+    the slot indices and the static validity per call and fuses the slot
+    gather + edge function + two-level fold in one Pallas launch.
+    """
+
+    def __init__(self, monoid_name: str, dtype, interpret: bool = True,
+                 tile=None, q=None):
+        self.monoid = monoid_name
+        self.dtype = jnp.dtype(dtype)
+        self.interpret = interpret
+        self.tile = tile
+        self.q = q
+
+    def __call__(self, table, table_valid, idx, edge_valid, dst,
+                 num_segments, w=None, apply_weight=None):
+        tile = int(self.tile) if self.tile else default_fold_tile()
+        q = int(self.q) if self.q else default_fold_q()
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.fused_dc")):
+            return fused_scatter_fold(
+                table, table_valid, idx, edge_valid, dst,
+                int(num_segments), monoid=self.monoid, edge_tile=tile,
+                fold_q=q, interpret=self.interpret,
+                apply_weight=apply_weight, w=w)
+
+
+class RefFusedStream:
+    """Pure-jnp stream fused step with FusedStreamKernel's call contract."""
+
+    def __init__(self, monoid):
+        self.monoid = monoid
+
+    def __call__(self, table, table_valid, idx, edge_valid, dst,
+                 num_segments, w=None, apply_weight=None):
+        with obs_tracing.kernel_scope(
+                getattr(self, "_obs_scope", "ppm.fused_dc.ref")):
+            return ref_fused_scatter_fold(
+                self.monoid, table, table_valid, idx, edge_valid, dst,
+                int(num_segments), apply_weight=apply_weight, w=w)
+
+
 class RefScatter:
     """Pure-jnp DC scatter with ScatterKernel's exact call contract."""
 
@@ -328,6 +507,9 @@ def make_kernels(layout, monoid, backend=None, platform=None,
 
 
 __all__ = ["GatherKernel", "ScatterKernel", "SpmvKernel", "FoldKernel",
-           "RefGather", "RefScatter", "RefSpmv", "RefFold", "make_kernels",
-           "segment_combine", "dc_gather", "spmv_block",
-           "blocked_segment_fold", "two_level_segment_fold", "kref"]
+           "FusedDCKernel", "FusedStreamKernel", "RefGather", "RefScatter",
+           "RefSpmv", "RefFold", "RefFusedDC", "RefFusedStream",
+           "make_kernels", "segment_combine", "dc_gather", "spmv_block",
+           "blocked_segment_fold", "two_level_segment_fold",
+           "fused_scatter_fold", "ref_fused_scatter_fold", "fused_enabled",
+           "kref"]

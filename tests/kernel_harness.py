@@ -1,0 +1,131 @@
+"""Shared differential-testing harness for registry kernels.
+
+Every property test of a registry kernel follows the same shape: draw a
+message stream / graph geometry from closed hypothesis strategies, run
+the kernel under test, run its pure-jnp oracle, and demand bit-exact
+agreement.  The closed sets (monoidxdtype combos, segment counts, tile
+and ``fold_q`` geometry, the over-cap ``NS_Q_PAIRS``) and the comparator
+live HERE so ``test_fold_property.py``, ``test_fused_property.py``, and
+future kernel tests draw from one vocabulary instead of copy-pasting it
+per file.
+
+Payloads are integer-valued (:func:`payload`) so even the f32 add fold
+is exact regardless of summation order and every comparison can be
+bit-for-bit.  Import order matters for the optional dev dependency: test
+files must ``pytest.importorskip("hypothesis")`` BEFORE importing this
+module (it imports hypothesis strategies at module scope).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import strategies as st
+
+from repro.core import monoid as M
+from repro.kernels.fold_block import DEFAULT_FOLD_MAX_SEGMENTS
+
+SEGMENT_OPS = {"add": jax.ops.segment_sum, "min": jax.ops.segment_min,
+               "max": jax.ops.segment_max}
+
+# the full Pallas-lowerable cross-product: {add,min,max} x {f32,i32,u32}
+MONOIDS = {("add", "float32"): lambda: M.add(jnp.float32),
+           ("add", "int32"): lambda: M.add(jnp.int32),
+           ("add", "uint32"): lambda: M.add(jnp.uint32),
+           ("min", "float32"): lambda: M.min_(jnp.float32),
+           ("min", "int32"): lambda: M.min_(jnp.int32),
+           ("min", "uint32"): lambda: M.min_(jnp.uint32),
+           ("max", "float32"): lambda: M.max_(jnp.float32),
+           ("max", "int32"): lambda: M.max_(jnp.int32),
+           ("max", "uint32"): lambda: M.max_(jnp.uint32)}
+
+# small closed sets keep the jit-compile count bounded while still covering
+# multi-block streams, ragged tails, and the single-segment degenerate case
+NUM_SEGMENTS = (1, 2, 5, 9, 17)
+FOLD_TILES = (8, 16)
+
+CAP = DEFAULT_FOLD_MAX_SEGMENTS
+# closed (num_segments, fold_q) pairs keep the bucket grid small enough
+# for interpret mode while covering: below / at / just past / 2x / 3x the
+# cap, bucket widths that are non-powers-of-two, that don't divide the
+# segment count, and that exceed it (single-bucket degenerate case)
+NS_Q_PAIRS = ((8, 3), (100, 7), (1024, 2048), (CAP - 1, 512),
+              (CAP, 1000), (CAP + 1, 257), (2 * CAP, 1024),
+              (3 * CAP, 4096))
+
+
+def payload(rng, n, dtype):
+    """Integer-valued payload cast to ``dtype`` (nonnegative for unsigned):
+    exact under any summation order, so f32 comparisons stay bit-exact."""
+    lo = 0 if np.dtype(dtype).kind == "u" else -64
+    return jnp.asarray(rng.integers(lo, 64, n).astype(np.dtype(dtype)))
+
+
+def draw_monoid(data):
+    """-> (name, dtype-string, Monoid) from the shared combo table."""
+    name, dtype = data.draw(st.sampled_from(sorted(MONOIDS)))
+    return name, dtype, MONOIDS[(name, dtype)]()
+
+
+def draw_stream(data, ns, dtype, max_len=40):
+    """Message stream for the fold contract: (vals, valid, ids).
+
+    Duplicate + out-of-order ids by construction; ``ns - 1`` doubles as
+    the engines' overflow bin and must behave like any other segment.
+    The validity density is drawn from {0, 0.5, 1} so the all-invalid
+    and all-valid extremes are first-class cases, not rare draws."""
+    n = data.draw(st.integers(0, max_len))
+    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
+    vals = payload(rng, n, dtype)
+    valid = jnp.asarray(rng.random(n) < data.draw(
+        st.sampled_from([0.0, 0.5, 1.0])))
+    ids = jnp.asarray(rng.integers(0, ns, n).astype(np.int32))
+    return vals, valid, ids
+
+
+def draw_fused_case(data, ns, dtype, max_edges=60):
+    """Graph-shaped inputs for the fused scatter->fold contract:
+    (table, table_valid, idx, edge_valid, dst).
+
+    The table plays the vertex message array; idx is the per-edge source
+    slot (duplicates model high-degree sources), edge_valid the static
+    structure, dst the destination segment.  Table-validity density and
+    edge-validity density are drawn independently so empty frontiers
+    (all table slots invalid) and all-pad tiles both occur."""
+    m = data.draw(st.integers(1, 50))
+    ne = data.draw(st.integers(0, max_edges))
+    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
+    table = payload(rng, m, dtype)
+    tvalid = jnp.asarray(
+        rng.random(m) < data.draw(st.sampled_from([0.0, 0.5, 1.0])))
+    idx = jnp.asarray(rng.integers(0, m, ne).astype(np.int32))
+    evalid = jnp.asarray(
+        rng.random(ne) < data.draw(st.sampled_from([0.0, 0.5, 1.0])))
+    dst = jnp.asarray(rng.integers(0, ns, ne).astype(np.int32))
+    return table, tvalid, idx, evalid, dst
+
+
+def segment_oracle(mono, vals, valid, ids, ns):
+    """The jax.ops ground truth of the fold contract: (acc, touched)."""
+    mvals = jnp.where(valid, vals, mono.identity)
+    acc = SEGMENT_OPS[mono.name](mvals, ids, num_segments=ns)
+    touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
+                                  num_segments=ns) > 0
+    return acc, touched
+
+
+def assert_kernel_equiv(kernel, ref_fn, args, ref_args=None):
+    """Bit-exact differential check: ``kernel(*args)`` vs
+    ``ref_fn(*(ref_args or args))``.
+
+    Both sides return ``(acc, touched)`` (any tuple of arrays works);
+    every component must match exactly — dtype-level exactness is the
+    whole point of the integer payloads, so no tolerance parameter."""
+    got = kernel(*args)
+    want = ref_fn(*(args if ref_args is None else ref_args))
+    if not isinstance(got, tuple):
+        got, want = (got,), (want,)
+    assert len(got) == len(want)
+    for i, (g, w) in enumerate(zip(got, want)):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.shape == w.shape, (i, g.shape, w.shape)
+        assert np.array_equal(g, w), (
+            f"component {i} diverges: kernel={g!r} ref={w!r}")

@@ -346,8 +346,10 @@ def test_env_override_selects_backend(monkeypatch):
 def test_env_override_end_to_end(layout, monkeypatch, env):
     monkeypatch.setenv(registry.ENV_VAR, env)
     eng = Engine(layout, bfs_program())
+    # the override steers every kernel, including the fused DC step (bfs
+    # is min/uint32, which both Pallas backends and ref lower)
     assert eng.backend_names == {"gather": env, "scatter": env,
-                                 "fold": env}
+                                 "fold": env, "fused_dc": env}
     res = bfs(layout, source=3, engine=eng)
     ref = bfs(layout, source=3, backend="ref")
     assert np.array_equal(res["level"], ref["level"])
@@ -493,32 +495,34 @@ def test_check_bench_regression(tmp_path):
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
 
-    # the guard must cover the over-cap two-level fold rows (fold2) the
-    # same way it covers every other kernel row
-    kernels = ("gather", "scatter", "spmv", "fold", "fold2")
+    # the guard must cover the over-cap two-level fold rows (fold2) and
+    # the fused DC step rows the same way it covers every other kernel row
+    kernels = ("gather", "scatter", "spmv", "fold", "fold2", "fused")
 
     def doc(walls):
         return {"results": [
             {"kernel": k, "backend": "ref", "monoid": "add", "scale": 6,
              "wall_s": w} for k, w in zip(kernels, walls)]}
-    flat = doc([0.010] * 5)
+    flat = doc([0.010] * 6)
     assert mod.check(flat, flat, 2.0, 0.005) == 0
     # one kernel 3x while the rest hold: a real regression — including
-    # when the regressed row is the two-level fold
-    assert mod.check(doc([0.030, 0.010, 0.010, 0.010, 0.010]), flat,
-                     2.0, 0.005) == 1
-    assert mod.check(doc([0.010, 0.010, 0.010, 0.010, 0.030]), flat,
-                     2.0, 0.005) == 1
-    # two of five kernels ~4x: the healthy rows must outvote them (a
+    # when the regressed row is the two-level fold or the fused step
+    assert mod.check(doc([0.030, 0.010, 0.010, 0.010, 0.010, 0.010]),
+                     flat, 2.0, 0.005) == 1
+    assert mod.check(doc([0.010, 0.010, 0.010, 0.010, 0.030, 0.010]),
+                     flat, 2.0, 0.005) == 1
+    assert mod.check(doc([0.010, 0.010, 0.010, 0.010, 0.010, 0.030]),
+                     flat, 2.0, 0.005) == 1
+    # two of six kernels ~4x: the healthy rows must outvote them (a
     # median calibration would forgive this as 'machine speed')
-    assert mod.check(doc([0.039, 0.039, 0.010, 0.010, 0.010]), flat,
-                     2.0, 0.005) == 1
+    assert mod.check(doc([0.039, 0.039, 0.010, 0.010, 0.010, 0.010]),
+                     flat, 2.0, 0.005) == 1
     # a uniformly 2.5x slower runner is machine speed, not a regression
-    assert mod.check(doc([0.025] * 5), flat, 2.0, 0.005) == 0
+    assert mod.check(doc([0.025] * 6), flat, 2.0, 0.005) == 0
     # ... but a uniform slowdown beyond the calibration clamp still fails
-    assert mod.check(doc([0.080] * 5), flat, 2.0, 0.005) == 1
+    assert mod.check(doc([0.080] * 6), flat, 2.0, 0.005) == 1
     # sub-floor rows are dispatch jitter and never flag
-    assert mod.check(doc([0.004] * 5), doc([0.001] * 5), 2.0, 0.005) == 0
+    assert mod.check(doc([0.004] * 6), doc([0.001] * 6), 2.0, 0.005) == 0
     other = {"results": [{"kernel": "spmv", "backend": "ref",
                           "monoid": "add", "scale": 8, "wall_s": 1.0}]}
     assert mod.check(flat, other, 2.0, 0.005) == 2              # no overlap
@@ -538,7 +542,7 @@ def test_bench_kernels_smoke(tmp_path):
     assert disk["meta"]["platform"] == jax.default_backend()
     rows = disk["results"]
     assert {r["kernel"] for r in rows} == {"gather", "scatter", "spmv",
-                                           "fold", "fold2"}
+                                           "fold", "fold2", "fused"}
     assert {r["backend"] for r in rows} == {"ref", "pallas-interpret"}
     assert all(r["wall_s"] > 0 for r in rows)
     assert all(r["fold_q"] > 0 for r in rows)

@@ -310,6 +310,54 @@ class TestIncrementalRecompute:
         warm = pagerank(lay2, iters=60, pr0=old)["pr"]
         assert np.abs(warm - ref).max() <= 1e-6
 
+    def test_cc_resume_accepts_delta_buffer(self, delta_pair):
+        """touched= takes the DeltaBuffer itself (preferred: the boolean
+        mask cannot carry the insert/delete distinction the exactness
+        contract depends on) — same bit-exact result as the mask path."""
+        lay, d, lay2 = delta_pair
+        old = connected_components(lay)
+        cold = connected_components(lay2)
+        warm = connected_components(lay2, resume_labels=old["label"],
+                                    touched=d)
+        assert np.array_equal(cold["label"], warm["label"])
+
+    def test_resume_deletion_delta_raises(self, delta_pair):
+        """Regression: a delta with deletions used to quietly recompute
+        from the stale fixpoint (converging to a WRONG answer — deleted
+        edges may require values to rise, which monotone relaxation
+        cannot do).  It must raise instead, at both entry points."""
+        lay, d, lay2 = delta_pair
+        old = connected_components(lay)
+        ddel = DeltaBuffer(k=d.k, q=d.q, n=d.n)
+        u = 1
+        ddel.insert(0, u, 1.0).delete(u, 0)
+        assert ddel.num_deletes
+        with pytest.raises(ValueError, match="insertion-only"):
+            connected_components(lay2, resume_labels=old["label"],
+                                 touched=ddel)
+        from repro.apps.cc import cc_program
+        from repro.core.engine import Engine
+        import jax.numpy as jnp
+        eng = Engine(lay2, cc_program(), mode="hybrid")
+        with pytest.raises(ValueError, match="insertion-only"):
+            eng.run(resume_from={"label": jnp.asarray(
+                np.arange(lay2.n_pad, dtype=np.uint32))}, touched=ddel)
+
+    def test_resume_non_idempotent_monoid_raises(self, delta_pair):
+        """Regression: resuming an add-monoid program double-counts the
+        contributions already absorbed into the old fixpoint — the engine
+        must refuse and point at the residual path (pagerank pr0=)."""
+        lay, d, lay2 = delta_pair
+        from repro.apps.pagerank import pagerank_program
+        from repro.core.engine import Engine
+        import jax.numpy as jnp
+        prog = pagerank_program(lay2.n)
+        assert prog.monoid.name == "add"
+        eng = Engine(lay2, prog, mode="dc")
+        state = {"pr": jnp.zeros(lay2.n_pad, jnp.float32)}
+        with pytest.raises(ValueError, match="idempotent"):
+            eng.run(resume_from=state, touched=d.touched())
+
 
 # ----------------------------------------------------------------------
 # epoch-tagged serving: scoped invalidation + migration

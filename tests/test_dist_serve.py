@@ -234,3 +234,55 @@ def test_graph_server_dist_requires_both_args(glayout, mesh1):
         GraphQueryServer(glayout, sharded=shard_layout(glayout, 1))
     with pytest.raises(ValueError):
         GraphQueryServer(glayout, mesh=mesh1)
+
+
+def test_sharded_serving_disables_semantic_seeding(mesh1, monkeypatch):
+    """The docstring promises semantic-cache seeding silently disables
+    under ``sharded=`` serving; this asserts the disable actually
+    happens — no ``sem|`` writes, no landmark lookup or capture, zero
+    semantic hit/miss counters — while the SAME symmetric layout served
+    unsharded does capture landmarks (so the contrast is the sharding,
+    not the graph)."""
+    from repro.apps.sssp import sssp
+    from repro.graph import symmetrize
+    from repro.serve import GraphQuery, GraphQueryServer, ServeConfig
+    from repro.serve import cache as cache_lib
+
+    g = symmetrize(rmat(7, 8, seed=3, weighted=True))
+    lay = build_layout(g, k=8, edge_tile=32, msg_tile=16)
+
+    # contrast leg first (before the tripwires): unsharded serving on
+    # this layout is seedable and writes sem| landmark entries
+    srv0 = GraphQueryServer(lay, ServeConfig(cache_size=64))
+    assert srv0._seedable("sssp")
+    for i, s in enumerate([3, 9]):
+        srv0.submit(GraphQuery(i, "sssp", {"source": s}))
+    srv0.run()
+    assert any(k.startswith("sem|") for k in srv0.cache.keys())
+
+    # sharded leg: semantic REQUESTED in the config, silently disabled
+    SL = shard_layout(lay, 1)
+    srv = GraphQueryServer(lay, ServeConfig(
+        cache_size=64, mode="dc", sharded=SL, mesh=mesh1,
+        semantic=True, capture_landmarks=True))
+    assert srv.semantic is not None          # the cache client exists...
+    assert not srv._seedable("sssp")         # ...but seeding is off
+    monkeypatch.setattr(
+        cache_lib.SemanticCache, "best_landmark",
+        lambda *a, **k: pytest.fail("landmark lookup under sharded="))
+    monkeypatch.setattr(
+        GraphQueryServer, "_capture_landmarks",
+        lambda *a, **k: pytest.fail("landmark capture under sharded="))
+    sources = [3, 9, 14]
+    for i, s in enumerate(sources):
+        srv.submit(GraphQuery(10 + i, "sssp", {"source": s}))
+    done = srv.run()
+    assert len(done) == len(sources)
+    assert srv.semantic_hits == 0 and srv.semantic_misses == 0
+    assert not any("sem|" in k for k in srv.cache.keys())
+    # and the un-seeded distributed answers are still exact
+    for q in done:
+        ref = sssp(lay, source=q.params["source"])["dist"]
+        fin = np.isfinite(ref)
+        assert np.array_equal(np.isinf(q.result["dist"]), np.isinf(ref))
+        assert np.abs(q.result["dist"][fin] - ref[fin]).max() <= 1e-6

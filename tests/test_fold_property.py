@@ -8,10 +8,12 @@ oracles (and each other) for ANY message stream: duplicate ids, empty
 segments, out-of-order ids, all-invalid blocks, the ``n_pad + 1``
 overflow bin, segment counts on both sides of the cap, non-power-of-two
 bucket widths, and stream lengths that do not divide the message tile.
-Payloads are integer-valued so even the f32 add fold is exact and the
-comparison can be bit-for-bit.
+
+Strategies, monoid×dtype combos, and the bit-exact comparator come from
+the shared differential harness (``tests/kernel_harness.py``); payloads
+are integer-valued so even the f32 add fold is exact and the comparison
+can be bit-for-bit.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -19,72 +21,44 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
+from kernel_harness import (FOLD_TILES, NS_Q_PAIRS, NUM_SEGMENTS,
+                            assert_kernel_equiv, draw_monoid, draw_stream,
+                            segment_oracle)
 from repro.backend import registry
-from repro.core import monoid as M
-from repro.kernels.fold_block import (DEFAULT_FOLD_MAX_SEGMENTS,
-                                      blocked_segment_fold)
+from repro.kernels.fold_block import blocked_segment_fold
 from repro.kernels.fold_two_level import two_level_segment_fold
-
-SEGMENT_OPS = {"add": jax.ops.segment_sum, "min": jax.ops.segment_min,
-               "max": jax.ops.segment_max}
-MONOIDS = {("add", "float32"): lambda: M.add(jnp.float32),
-           ("add", "int32"): lambda: M.add(jnp.int32),
-           ("min", "float32"): lambda: M.min_(jnp.float32),
-           ("min", "int32"): lambda: M.min_(jnp.int32),
-           ("max", "float32"): lambda: M.max_(jnp.float32),
-           ("max", "int32"): lambda: M.max_(jnp.int32)}
-
-# small closed sets keep the jit-compile count bounded while still covering
-# multi-block streams, ragged tails, and the single-segment degenerate case
-NUM_SEGMENTS = (1, 2, 5, 9, 17)
-FOLD_TILES = (8, 16)
 
 
 @settings(max_examples=40, deadline=None)
 @given(st.data())
 def test_blocked_fold_matches_segment_ops(data):
-    monoid, dtype = data.draw(st.sampled_from(sorted(MONOIDS)))
-    mono = MONOIDS[(monoid, dtype)]()
+    monoid, dtype, mono = draw_monoid(data)
     ns = data.draw(st.sampled_from(NUM_SEGMENTS))
     tile = data.draw(st.sampled_from(FOLD_TILES))
-    n = data.draw(st.integers(0, 40))
-    seed = data.draw(st.integers(0, 10**6))
-    rng = np.random.default_rng(seed)
+    vals, valid, ids = draw_stream(data, ns, dtype)
 
-    vals = jnp.asarray(rng.integers(-64, 64, n).astype(np.dtype(dtype)))
-    valid = jnp.asarray(rng.random(n) < data.draw(
-        st.sampled_from([0.0, 0.5, 1.0])))
-    # out-of-order + duplicates by construction; ns - 1 doubles as the
-    # engines' overflow bin and must behave like any other segment
-    ids = jnp.asarray(rng.integers(0, ns, n).astype(np.int32))
-
-    acc, touched = blocked_segment_fold(vals, valid, ids, ns,
-                                        monoid=monoid, fold_tile=tile,
-                                        interpret=True)
-    mvals = jnp.where(valid, vals, mono.identity)
-    ref_acc = SEGMENT_OPS[monoid](mvals, ids, num_segments=ns)
-    ref_touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
-                                      num_segments=ns) > 0
-    assert np.array_equal(np.asarray(acc), np.asarray(ref_acc))
-    assert np.array_equal(np.asarray(touched), np.asarray(ref_touched))
+    assert_kernel_equiv(
+        lambda v, va, i: blocked_segment_fold(v, va, i, ns, monoid=monoid,
+                                              fold_tile=tile,
+                                              interpret=True),
+        lambda v, va, i: segment_oracle(mono, v, va, i, ns),
+        (vals, valid, ids))
 
     # and the registry's tightened ref fold implements the same contract
     rf = registry.BACKENDS["ref"].segment_fold(mono)
-    racc, rtouched = rf(vals, valid, ids, ns)
-    assert np.array_equal(np.asarray(racc), np.asarray(ref_acc))
-    assert np.array_equal(np.asarray(rtouched), np.asarray(ref_touched))
+    assert_kernel_equiv(
+        lambda v, va, i: rf(v, va, i, ns),
+        lambda v, va, i: segment_oracle(mono, v, va, i, ns),
+        (vals, valid, ids))
 
 
 @settings(max_examples=15, deadline=None)
 @given(st.data())
 def test_blocked_fold_all_invalid_returns_identity(data):
-    monoid, dtype = data.draw(st.sampled_from(sorted(MONOIDS)))
-    mono = MONOIDS[(monoid, dtype)]()
+    monoid, dtype, mono = draw_monoid(data)
     ns = data.draw(st.sampled_from(NUM_SEGMENTS))
-    n = data.draw(st.integers(0, 40))
-    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
-    vals = jnp.asarray(rng.integers(-64, 64, n).astype(np.dtype(dtype)))
-    ids = jnp.asarray(rng.integers(0, ns, n).astype(np.int32))
+    vals, _, ids = draw_stream(data, ns, dtype)
+    n = vals.shape[0]
     acc, touched = blocked_segment_fold(vals, jnp.zeros((n,), jnp.bool_),
                                         ids, ns, monoid=monoid,
                                         fold_tile=8, interpret=True)
@@ -97,15 +71,6 @@ def test_blocked_fold_all_invalid_returns_identity(data):
 # two-level fold: segment counts across the REPRO_FOLD_MAX_SEGMENTS cap
 # ----------------------------------------------------------------------
 
-CAP = DEFAULT_FOLD_MAX_SEGMENTS
-# closed (num_segments, fold_q) pairs keep the bucket grid small enough
-# for interpret mode while covering: below / at / just past / 2x / 3x the
-# cap, bucket widths that are non-powers-of-two, that don't divide the
-# segment count, and that exceed it (single-bucket degenerate case)
-NS_Q_PAIRS = ((8, 3), (100, 7), (1024, 2048), (CAP - 1, 512),
-              (CAP, 1000), (CAP + 1, 257), (2 * CAP, 1024),
-              (3 * CAP, 4096))
-
 
 @settings(max_examples=25, deadline=None)
 @given(st.data())
@@ -113,48 +78,33 @@ def test_two_level_fold_matches_flat_and_segment_ops(data):
     """two-level ≡ flat blocked ≡ jax.ops.segment_* for segment counts on
     both sides of the cap (the flat kernel has no VMEM ceiling in
     interpret mode, so it can serve as a second oracle everywhere)."""
-    monoid, dtype = data.draw(st.sampled_from(sorted(MONOIDS)))
-    mono = MONOIDS[(monoid, dtype)]()
+    monoid, dtype, mono = draw_monoid(data)
     ns, q = data.draw(st.sampled_from(NS_Q_PAIRS))
     tile = data.draw(st.sampled_from(FOLD_TILES))
-    n = data.draw(st.integers(0, 60))
-    seed = data.draw(st.integers(0, 10**6))
-    rng = np.random.default_rng(seed)
+    vals, valid, ids = draw_stream(data, ns, dtype, max_len=60)
 
-    vals = jnp.asarray(rng.integers(-64, 64, n).astype(np.dtype(dtype)))
-    valid = jnp.asarray(rng.random(n) < data.draw(
-        st.sampled_from([0.0, 0.5, 1.0])))
-    # duplicates + out-of-order by construction; ns - 1 doubles as the
-    # engines' overflow bin and must behave like any other segment
-    ids = jnp.asarray(rng.integers(0, ns, n).astype(np.int32))
-
-    acc2, touched2 = two_level_segment_fold(vals, valid, ids, ns,
-                                            monoid=monoid, fold_tile=tile,
-                                            fold_q=q, interpret=True)
-    mvals = jnp.where(valid, vals, mono.identity)
-    ref_acc = SEGMENT_OPS[monoid](mvals, ids, num_segments=ns)
-    ref_touched = jax.ops.segment_max(valid.astype(jnp.int32), ids,
-                                      num_segments=ns) > 0
-    assert np.array_equal(np.asarray(acc2), np.asarray(ref_acc))
-    assert np.array_equal(np.asarray(touched2), np.asarray(ref_touched))
-
-    facc, ftouched = blocked_segment_fold(vals, valid, ids, ns,
-                                          monoid=monoid, fold_tile=tile,
-                                          interpret=True)
-    assert np.array_equal(np.asarray(acc2), np.asarray(facc))
-    assert np.array_equal(np.asarray(touched2), np.asarray(ftouched))
+    two_level = lambda v, va, i: two_level_segment_fold(
+        v, va, i, ns, monoid=monoid, fold_tile=tile, fold_q=q,
+        interpret=True)
+    assert_kernel_equiv(
+        two_level,
+        lambda v, va, i: segment_oracle(mono, v, va, i, ns),
+        (vals, valid, ids))
+    assert_kernel_equiv(
+        two_level,
+        lambda v, va, i: blocked_segment_fold(v, va, i, ns, monoid=monoid,
+                                              fold_tile=tile,
+                                              interpret=True),
+        (vals, valid, ids))
 
 
 @settings(max_examples=10, deadline=None)
 @given(st.data())
 def test_two_level_fold_all_invalid_returns_identity(data):
-    monoid, dtype = data.draw(st.sampled_from(sorted(MONOIDS)))
-    mono = MONOIDS[(monoid, dtype)]()
+    monoid, dtype, mono = draw_monoid(data)
     ns, q = data.draw(st.sampled_from(NS_Q_PAIRS))
-    n = data.draw(st.integers(0, 40))
-    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
-    vals = jnp.asarray(rng.integers(-64, 64, n).astype(np.dtype(dtype)))
-    ids = jnp.asarray(rng.integers(0, ns, n).astype(np.int32))
+    vals, _, ids = draw_stream(data, ns, dtype)
+    n = vals.shape[0]
     acc, touched = two_level_segment_fold(vals, jnp.zeros((n,), jnp.bool_),
                                           ids, ns, monoid=monoid,
                                           fold_tile=8, fold_q=q,
